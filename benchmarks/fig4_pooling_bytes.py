@@ -1,0 +1,90 @@
+"""Paper Fig 4: hierarchical pooling cuts embedding bytes on the network.
+
+Two measurements:
+  (a) host wire format — raw rows (4a) vs pushed-down partials (4b) bytes for
+      zipf multi-hot traffic (HostLookupService.network_bytes);
+  (b) SPMD collective bytes — baseline vs hierarchical DisaggEmbedding modes,
+      parsed from compiled HLO of a small sharded lookup (the TPU-native
+      restatement: the psum payload drops from [B,F,nnz,D] to [B,F,D]).
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data import synthetic as syn
+
+SPMD_PROBE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp, json
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.core.sharding import TableSpec
+from repro.core.embedding import DisaggEmbedding
+from repro.launch.hlo_analysis import analyze
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+specs = [TableSpec(f"t{i}", 100_000, nnz=8) for i in range(8)]
+out = {}
+for mode in ("baseline", "hierarchical"):
+    emb = DisaggEmbedding(specs=specs, dim=64, num_shards=4, mode=mode)
+    SDS = jax.ShapeDtypeStruct
+    p = {"table": SDS((emb.sharded.total_rows, 64), jnp.float32)}
+    idx = SDS((256, 8, 8), jnp.int32); msk = SDS((256, 8, 8), jnp.bool_)
+    sh = lambda s: NamedSharding(mesh, s)
+    comp = jax.jit(
+        lambda p, i, m: emb.lookup(p, i, m, mesh=mesh),
+        in_shardings=({"table": sh(P("model", None))}, sh(P("data", None, None)),
+                      sh(P("data", None, None))),
+    ).lower(p, idx, msk).compile()
+    out[mode] = analyze(comp.as_text(), 8).collective_bytes_per_device
+print(json.dumps(out))
+"""
+
+
+def run(batch: int = 1024, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    specs = tuple(TableSpec(f"t{i}", 100_000, nnz=8) for i in range(8))
+    tables = make_fused_tables(specs, 64, 8)
+    table = rng.normal(size=(tables.total_rows, 64)).astype(np.float32)
+    b = syn.recsys_batch(rng, specs, batch)
+    svc_raw = HostLookupService(tables, table, pushdown=False)
+    svc_pd = HostLookupService(tables, table, pushdown=True)
+    t0 = time.perf_counter()
+    try:
+        raw = svc_raw.network_bytes(b["indices"], b["mask"])
+        pd = svc_pd.network_bytes(b["indices"], b["mask"])
+    finally:
+        svc_raw.close()
+        svc_pd.close()
+
+    import json
+    import os
+    import pathlib
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SPMD_PROBE], env=env, capture_output=True,
+        text=True, timeout=560,
+    )
+    spmd = json.loads(proc.stdout.strip().splitlines()[-1]) if proc.returncode == 0 else {}
+    out = {
+        "us_per_call": 1e6 * (time.perf_counter() - t0),
+        "host_raw_bytes": raw,
+        "host_pushdown_bytes": pd,
+        "host_reduction": raw / max(pd, 1),
+    }
+    if spmd:
+        out["spmd_baseline_coll_bytes"] = spmd["baseline"]
+        out["spmd_hierarchical_coll_bytes"] = spmd["hierarchical"]
+        out["spmd_reduction"] = spmd["baseline"] / max(spmd["hierarchical"], 1)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

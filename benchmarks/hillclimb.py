@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=512", ""
+    )
+).strip()
+
+"""§Perf hillclimb driver: lower a MODIFIED config for one of the three
+selected (arch x shape) cells, re-analyze the roofline terms, and append the
+iteration record to experiments/hillclimb/<name>.json.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell wide-deep-train --variant mesh2d
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "hillclimb"
+
+
+def _to_sh(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(build, mesh):
+    with mesh:
+        jitted = jax.jit(
+            build.step_fn,
+            in_shardings=_to_sh(mesh, build.in_shardings),
+            donate_argnums=build.donate_argnums,
+        )
+        compiled = jitted.lower(*build.args).compile()
+        mem = compiled.memory_analysis()
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    terms = hlo_analysis.analyze(compiled.as_text(), n_dev)
+    gib = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+    ) / 2**30
+    return terms, gib
+
+
+# --------------------------------------------------------------- cell builds
+
+
+def wide_deep_train(variant: str):
+    from repro.configs.recsys_common import build_recsys_cell
+    from repro.configs.wide_deep import make_config
+
+    cfg = make_config()
+    if variant == "baseline-paper-fig4a":
+        cfg = dataclasses.replace(cfg, mode="baseline")
+    elif variant == "hierarchical":
+        pass  # the paper-faithful default
+    elif variant == "mesh2d":
+        cfg = dataclasses.replace(cfg, mode="mesh2d")
+    elif variant == "mesh2d-bf16comm":
+        import jax.numpy as jnp
+
+        cfg = dataclasses.replace(cfg, mode="mesh2d", comm_dtype=jnp.bfloat16)
+    elif variant == "mesh2d-bf16all":
+        import jax.numpy as jnp
+
+        cfg = dataclasses.replace(cfg, mode="mesh2d", comm_dtype=jnp.bfloat16,
+                                  compute_dtype=jnp.bfloat16)
+    elif variant == "mesh2d-fusedwide":
+        cfg = dataclasses.replace(cfg, mode="mesh2d", fuse_wide=True)
+    elif variant == "hier-bf16comm":
+        import jax.numpy as jnp
+
+        cfg = dataclasses.replace(cfg, comm_dtype=jnp.bfloat16)
+    else:
+        raise ValueError(variant)
+    mesh = make_production_mesh()
+    return build_recsys_cell(cfg, "train_batch", mesh, False), mesh
+
+
+def llama_train(variant: str):
+    import jax.numpy as jnp
+
+    from repro.configs.lm_common import build_lm_cell
+    from repro.configs.llama3_405b import CONFIG
+
+    cfg = CONFIG
+    if variant == "baseline":
+        pass
+    elif variant == "no-seqshard":
+        cfg = dataclasses.replace(cfg, seq_shard=False)
+    elif variant == "micro8":
+        cfg = dataclasses.replace(cfg, microbatches=8)
+    elif variant == "micro2":
+        cfg = dataclasses.replace(cfg, microbatches=2)
+    elif variant == "bf16grads":
+        cfg = dataclasses.replace(cfg, bf16_grads=True)
+    elif variant == "bf16grads-micro2":
+        cfg = dataclasses.replace(cfg, bf16_grads=True, microbatches=2)
+    elif variant == "noSP-micro8":
+        cfg = dataclasses.replace(cfg, seq_shard=False, microbatches=8)
+    elif variant == "qblock1024":
+        cfg = dataclasses.replace(cfg, q_block=1024)
+    else:
+        raise ValueError(variant)
+    mesh = make_production_mesh()
+    return build_lm_cell(cfg, "adafactor", "train_4k", mesh, False, True), mesh
+
+
+def products_train(variant: str):
+    from repro.configs.graphsage_reddit import build_cell
+
+    mesh = make_production_mesh()
+    if variant == "baseline":
+        return build_cell("ogb_products", mesh, False), mesh
+    if variant == "partitioned":
+        from benchmarks.gnn_partitioned import build_partitioned_cell
+
+        return build_partitioned_cell(mesh, False), mesh
+    if variant == "partitioned-pad128":
+        from benchmarks.gnn_partitioned import build_partitioned_cell
+
+        return build_partitioned_cell(mesh, False, pad_feat=128), mesh
+    raise ValueError(variant)
+
+
+def autoint_serve(variant: str):
+    """Adaptive-cache field replication: small-vocab fields replicated on
+    every chip leave the lookup collective statically (the controller's
+    field-level plan, core/adaptive_cache.py)."""
+    import dataclasses as _dc
+
+    from repro.configs.autoint import make_config
+    from repro.configs.recsys_common import build_recsys_cell
+
+    cfg = make_config()
+    if variant == "baseline":
+        pass
+    elif variant == "replicate-small":
+        # the 26 x 100k-vocab fields fit a 166 MB replica budget
+        cfg = _dc.replace(cfg, replicated_fields=tuple(range(13, 39)))
+    elif variant == "replicate-small-mid":
+        # + the 10 x 1M fields (806 MB total replicas)
+        cfg = _dc.replace(cfg, replicated_fields=tuple(range(3, 39)))
+    elif variant == "chunked4":
+        cfg = _dc.replace(cfg, num_chunks=4)
+    else:
+        raise ValueError(variant)
+    mesh = make_production_mesh()
+    return build_recsys_cell(cfg, "serve_p99", mesh, False), mesh
+
+
+CELLS = {
+    "wide-deep-train": wide_deep_train,
+    "autoint-serve": autoint_serve,
+    "llama3-train": llama_train,
+    "products-train": products_train,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--variant", required=True)
+    args = ap.parse_args()
+    build, mesh = CELLS[args.cell](args.variant)
+    terms, gib = lower_cell(build, mesh)
+    rec = {
+        "cell": args.cell,
+        "variant": args.variant,
+        "roofline": terms.as_dict(),
+        "gib_per_dev": gib,
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    f = OUT / f"{args.cell}.json"
+    hist = json.loads(f.read_text()) if f.exists() else []
+    hist = [h for h in hist if h["variant"] != args.variant] + [rec]
+    f.write_text(json.dumps(hist, indent=1))
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

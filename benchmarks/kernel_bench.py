@@ -1,0 +1,46 @@
+"""Microbench of the Pallas-kernel call sites vs their XLA baselines (CPU
+wall-time of the reference paths; the kernels themselves are TPU-target and
+validated in interpret mode — wall time here tracks the XLA baseline the
+kernels replace, giving the §Perf baseline numbers)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as REF
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return 1e6 * (time.perf_counter() - t0) / iters
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    table = jnp.asarray(rng.normal(size=(200_000, 128)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 200_000, 8192 * 4).astype(np.int32))
+    w = jnp.asarray(np.ones(8192 * 4, np.float32))
+    bag = jax.jit(lambda t, i, ww: REF.embedding_bag_ref(t, i, ww, 8192))
+    out["embedding_bag_us"] = _time(bag, table, idx, w)
+
+    x = jnp.asarray(rng.normal(size=(1024, 27, 64)).astype(np.float32))
+    dot = jax.jit(REF.dot_interaction_ref)
+    out["dot_interaction_us"] = _time(dot, x)
+
+    q = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)).astype(np.float32))
+    fa = jax.jit(lambda q, k, v: REF.flash_attention_ref(q, k, v, True))
+    out["attention_us"] = _time(fa, q, k, k)
+    out["us_per_call"] = sum(out.values())
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

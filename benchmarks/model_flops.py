@@ -1,0 +1,167 @@
+"""Analytic MODEL_FLOPS per (arch x shape): the 'useful work' numerator for
+the roofline table's MODEL_FLOPS / HLO_FLOPS ratio.
+
+Definitions (per the brief): dense LM train = 6*N*T, MoE = 6*N_active*T
+(N = params touched per token, T = tokens).  Inference: 2*N*T.  Attention's
+quadratic term is added explicitly (it is real model work, not waste):
+train 12*L*H*dh*S*T? -> expressed as 6 * (2*S*D_attn) per token-pair walk.
+Recsys/GNN get first-principles matmul counts.
+"""
+from __future__ import annotations
+
+from repro import configs
+from repro.configs.lm_common import LM_SHAPES
+from repro.configs.recsys_common import RECSYS_SHAPES, N_CANDIDATES
+
+
+def _lm_params_active(cfg) -> tuple[float, float]:
+    """(N_total, N_active_per_token), excluding embeddings' one-hot matmuls."""
+    D, dh = cfg.d_model, cfg.d_head
+    H, Hkv, F, L = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.n_layers
+    per_layer_dense = D * H * dh + 2 * D * Hkv * dh + H * dh * D
+    ffn = 3 * D * F if (cfg.moe is None or cfg.moe_dense_residual) else 0
+    n_active = per_layer_dense + ffn
+    n_total = n_active
+    if cfg.moe is not None:
+        expert = 3 * D * cfg.moe.d_ff
+        n_total += cfg.moe.num_experts * expert + D * cfg.moe.num_experts
+        n_active += cfg.moe.top_k * expert + D * cfg.moe.num_experts
+    head = 2 * cfg.vocab * D  # embed + lm head matmuls
+    return L * n_total + head, L * n_active + head
+
+
+def lm_model_flops(cfg, shape: str) -> float:
+    info = LM_SHAPES[shape]
+    S, B = info["seq"], info["batch"]
+    _, n_active = _lm_params_active(cfg)
+    attn_per_token = 2 * 2 * cfg.n_heads * cfg.d_head * S / 2  # causal avg S/2
+    if info["kind"] == "train":
+        T = S * B
+        return 6.0 * (n_active + attn_per_token * 0) * T + 3 * 2 * attn_per_token * T * cfg.n_layers
+    if info["kind"] == "prefill":
+        T = S * B
+        return 2.0 * n_active * T + 2 * attn_per_token * T * cfg.n_layers
+    # decode: one token per sample, attention over the full cache
+    T = B
+    attn_decode = 2 * 2 * cfg.n_heads * cfg.d_head * S
+    return 2.0 * n_active * T + attn_decode * T * cfg.n_layers
+
+
+def recsys_model_flops(cfg, shape: str) -> float:
+    info = RECSYS_SHAPES[shape]
+    B = info["batch"] if info["kind"] != "retrieval" else N_CANDIDATES
+    F, D = cfg.num_fields, cfg.embed_dim
+
+    def mlp_flops(sizes):
+        f = 0
+        for a, b in zip(sizes[:-1], sizes[1:]):
+            f += 2 * a * b
+        return f
+
+    per_sample = 0.0
+    if cfg.arch == "dlrm":
+        per_sample += mlp_flops((cfg.n_dense,) + cfg.bottom_mlp)
+        per_sample += 2 * (F + 1) ** 2 * D  # dot interaction
+        n_pairs = (F + 1) * (F + 2) // 2
+        per_sample += mlp_flops((n_pairs + cfg.bottom_mlp[-1],) + cfg.mlp + (1,))
+    elif cfg.arch == "wide_deep":
+        per_sample += mlp_flops((F * D + cfg.n_dense,) + cfg.mlp + (1,))
+    elif cfg.arch == "autoint":
+        d_in = D
+        for _ in range(cfg.attn_layers):
+            per_sample += 2 * F * d_in * cfg.d_attn * 3  # qkv
+            per_sample += 2 * F * F * cfg.d_attn * 2  # scores + av
+            per_sample += 2 * F * d_in * cfg.d_attn  # residual proj
+            d_in = cfg.d_attn
+        per_sample += 2 * F * d_in
+    elif cfg.arch == "two_tower":
+        Fu = cfg.user_tables
+        per_sample += mlp_flops((Fu * D,) + cfg.mlp)
+        per_sample += mlp_flops(((F - Fu) * D,) + cfg.mlp)
+        per_sample += 2 * cfg.mlp[-1]
+    elif cfg.arch == "mind":
+        per_sample += 2 * cfg.hist_len * D * D  # bilinear
+        per_sample += cfg.capsule_iters * (
+            2 * cfg.hist_len * cfg.n_interests * D * 2
+        )
+        per_sample += 2 * cfg.n_interests * D * D
+    elif cfg.arch == "dcn":
+        d0 = F * D + cfg.n_dense
+        per_sample += cfg.n_cross * 2 * d0 * cfg.cross_rank * 2  # U,V mats
+        per_sample += mlp_flops((d0,) + cfg.mlp)
+        per_sample += 2 * (d0 + cfg.mlp[-1])
+    elif cfg.arch == "deepfm":
+        per_sample += 4 * F * D  # FM second order
+        per_sample += mlp_flops((F * D + cfg.n_dense,) + cfg.mlp + (1,))
+    # lookup gather-adds: 2 flops per (row, dim) summed
+    nnz_total = sum(t.nnz for t in cfg.tables)
+    per_sample += 2 * nnz_total * D
+    mult = 3.0 if info["kind"] == "train" else 1.0
+    if cfg.arch == "two_tower" and info["kind"] == "retrieval":
+        # scoring one user against candidates
+        return 2.0 * N_CANDIDATES * cfg.mlp[-1]
+    if cfg.arch == "mind" and info["kind"] == "retrieval":
+        # routing once for the user + per-candidate interest dots
+        routing = (
+            2 * cfg.hist_len * D * D
+            + cfg.capsule_iters * 2 * cfg.hist_len * cfg.n_interests * D * 2
+        )
+        return routing + 2.0 * N_CANDIDATES * cfg.n_interests * D
+    total = mult * per_sample * B
+    if cfg.arch == "two_tower" and info["kind"] == "train":
+        # in-batch sampled softmax: the BxB score matrix is model work
+        total += 3.0 * 2.0 * B * B * cfg.mlp[-1]
+    return total
+
+
+def gnn_model_flops(shape_info: dict, d_hidden: int = 128, n_layers: int = 2) -> float:
+    kind = shape_info["kind"]
+    d = shape_info["d_feat"]
+    if kind == "full":
+        N, E = shape_info["n_nodes"], shape_info["n_edges"]
+        f = 0.0
+        d_in = d
+        for _ in range(n_layers):
+            f += 2 * E * d_in  # message gather-add
+            f += 2 * N * d_in * d_hidden * 2  # self + neigh mats
+            d_in = d_hidden
+        f += 2 * N * d_hidden * shape_info["n_classes"]
+        return 3.0 * f  # train
+    if kind == "minibatch":
+        tgt = shape_info["batch_nodes"]
+        f1, f2 = shape_info["fanout"]
+        n1, n2 = tgt * f1, tgt * f1 * f2
+        nodes = tgt + n1 + n2
+        f = 2 * (n2 + n1) * d + 2 * nodes * d * d_hidden * 2
+        f += 2 * (n1 + tgt) * d_hidden + 2 * nodes * d_hidden * d_hidden * 2
+        f += 2 * tgt * d_hidden * shape_info["n_classes"]
+        return 3.0 * f
+    # molecule
+    G, n, e = shape_info["batch"], shape_info["n_nodes"], shape_info["n_edges"]
+    f = G * (2 * e * d + 2 * n * d * d_hidden * 2
+             + 2 * e * d_hidden + 2 * n * d_hidden * d_hidden * 2
+             + 2 * d_hidden * shape_info["n_classes"])
+    return 3.0 * f
+
+
+def model_flops(arch_id: str, shape: str) -> float:
+    arch = configs.get(arch_id)
+    if arch.kind.startswith("lm"):
+        import importlib
+
+        mod = importlib.import_module(
+            "repro.configs." + arch_id.replace("-", "_")
+        )
+        return lm_model_flops(mod.CONFIG, shape)
+    if arch.kind == "recsys":
+        import importlib
+
+        mod = importlib.import_module(
+            "repro.configs." + arch_id.replace("-", "_")
+        )
+        return recsys_model_flops(mod.make_config(), shape)
+    if arch.kind == "gnn":
+        from repro.configs.graphsage_reddit import SHAPES
+
+        return gnn_model_flops(SHAPES[shape])
+    raise ValueError(arch_id)

@@ -1,0 +1,104 @@
+"""§Roofline: assemble the per-(arch x shape x mesh) table from the dry-run
+artifacts (experiments/dryrun/*.json) + analytic MODEL_FLOPS.
+
+Each row: three terms in seconds, dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPS ratio, and a one-line 'what would move the dominant term down'.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.model_flops import model_flops
+from repro import configs
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+MOVE_HINTS = {
+    ("recsys", "collective"): "shard tables over (data x model) so embedding "
+    "grads stay local (kills the DP table all-reduce); bf16 lookup partials",
+    ("recsys", "memory"): "fuse gather+pool (Pallas embedding_bag), bf16 rows",
+    ("recsys", "compute"): "batch the interaction matmuls on the MXU",
+    ("lm-dense", "collective"): "sequence-parallel RS/AG instead of TP "
+    "all-reduce; overlap layer collectives with compute; bf16 grads",
+    ("lm-dense", "memory"): "flash attention (Pallas) keeps scores in VMEM; "
+    "fewer remat recomputes; bf16 master-weight streaming",
+    ("lm-dense", "compute"): "already MXU-bound: raise per-chip batch",
+    ("lm-moe", "collective"): "same as lm-dense + expert-parallel a2a instead "
+    "of replicated-token psum",
+    ("lm-moe", "memory"): "flash attention + chunked dispatch buffers",
+    ("lm-moe", "compute"): "drop capacity factor / fuse expert GEMMs",
+    ("gnn", "collective"): "shard nodes instead of replicating them; "
+    "reduce-scatter the aggregation",
+    ("gnn", "memory"): "cast messages bf16; segment-sum in one pass",
+    ("gnn", "compute"): "MXU-align feature dims (pad 100->128)",
+}
+
+
+def load_rows(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        arch, shape = r["arch"], r["shape"]
+        t = r["roofline"]
+        try:
+            kind = configs.get(arch).kind
+        except KeyError:
+            kind = "recsys"
+        mf = model_flops(arch, shape) / r["n_devices"]
+        hlo = max(t["flops_per_device"], 1.0)
+        rows.append(
+            {
+                "arch": arch,
+                "shape": shape,
+                "mesh": r["mesh"],
+                "step": r["step"],
+                "compute_s": t["compute_s"],
+                "memory_s": t["memory_s"],
+                "collective_s": t["collective_s"],
+                "dominant": t["dominant"],
+                "bound_s": max(t["compute_s"], t["memory_s"], t["collective_s"]),
+                "model_flops_per_dev": mf,
+                "hlo_flops_per_dev": hlo,
+                "useful_ratio": mf / hlo,
+                "gib_per_dev": r["memory_analysis"].get("per_device_total", 0) / 2**30,
+                "hint": MOVE_HINTS.get((kind, t["dominant"]), ""),
+            }
+        )
+    return rows
+
+
+def render(rows: list[dict]) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':15s} {'mesh':8s} {'comp_ms':>9s} {'mem_ms':>10s} "
+        f"{'coll_ms':>10s} {'bound':>10s} {'MF/HLO':>7s} {'GiB':>6s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:15s} {r['mesh']:8s} "
+            f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:10.2f} "
+            f"{r['collective_s']*1e3:10.2f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.3f} {r['gib_per_dev']:6.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = load_rows(mesh)
+        if rows:
+            print(f"\n== Roofline table ({mesh}, {len(rows)} cells) ==")
+            print(render(rows))
+    rows = load_rows("16x16")
+    if rows:
+        worst = min(rows, key=lambda r: r["useful_ratio"])
+        coll = max(rows, key=lambda r: r["collective_s"] / max(r["bound_s"], 1e-12)
+                   if r["dominant"] == "collective" else 0)
+        print("\nworst useful-FLOPs ratio:", worst["arch"], worst["shape"],
+              f"{worst['useful_ratio']:.3f}")
+        print("most collective-bound:", coll["arch"], coll["shape"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Benchmark entrypoint — one bench per paper figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's headline
+quantity), then the full §Roofline table assembled from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+
+
+def main() -> None:
+    rows = []
+
+    def bench(name, fn, derive):
+        try:
+            out = fn()
+            rows.append((name, out.get("us_per_call", 0.0), derive(out)))
+            print(f"{name},{out.get('us_per_call', 0.0):.1f},{derive(out)}")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            rows.append((name, -1, "FAILED"))
+            print(f"{name},-1,FAILED")
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import (
+        fig2_embedding_dominance,
+        fig4_pooling_bytes,
+        fig7_cache_contention,
+        fig8_rdma,
+        kernel_bench,
+    )
+
+    bench(
+        "fig2_embedding_dominance",
+        fig2_embedding_dominance.run,
+        lambda o: f"embedding_share={o['embedding_share']:.2f}",
+    )
+    bench(
+        "fig4_pooling_bytes",
+        fig4_pooling_bytes.run,
+        lambda o: (
+            f"host_reduction={o['host_reduction']:.2f}x "
+            f"spmd_reduction={o.get('spmd_reduction', float('nan')):.2f}x"
+        ),
+    )
+    bench(
+        "fig7_cache_contention",
+        fig7_cache_contention.run,
+        lambda o: (
+            f"adaptive_vs_large_static={o['speedup_vs_large_static']:.2f}x "
+            f"adaptive_rows={o['adaptive_rows']}"
+        ),
+    )
+    bench(
+        "fig8_rdma",
+        fig8_rdma.run,
+        lambda o: (
+            f"engine_speedup={o['engine_speedup']:.2f}x "
+            f"credit_latency_reduction={o['credit_latency_reduction']:.0%} "
+            f"migration={o['migration_speedup']:.2f}x"
+        ),
+    )
+    bench(
+        "kernel_baselines",
+        kernel_bench.run,
+        lambda o: f"attention_us={o['attention_us']:.0f}",
+    )
+
+    print()
+    try:
+        from benchmarks import roofline
+
+        roofline.main()
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+
+    # §Perf hillclimb trajectories (if the driver has been run)
+    import pathlib
+
+    hc = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "hillclimb"
+    if hc.exists():
+        print("\n== §Perf hillclimb iterations (experiments/hillclimb) ==")
+        for f in sorted(hc.glob("*.json")):
+            print(f"-- {f.stem}")
+            for r in json.loads(f.read_text()):
+                t = r["roofline"]
+                print(
+                    f"   {r['variant']:22s} comp={t['compute_s']*1e3:10.2f}ms "
+                    f"mem={t['memory_s']*1e3:10.2f}ms "
+                    f"coll={t['collective_s']*1e3:10.2f}ms "
+                    f"gib={r['gib_per_dev']:6.2f}"
+                )
+
+    failed = [r for r in rows if r[2] == "FAILED"]
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""End-to-end serving example: the full FlexEMR pipeline over a diurnal
+request trace — bucketed batching, multi-threaded host lookup engines with
+pooling pushdown, the adaptive cache controller, straggler hedging, and the
+jit'd dense ranker.
+
+  PYTHONPATH=src python examples/serve_dlrm.py --requests 2000
+  PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --no-pushdown  # fig-4a ablation
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

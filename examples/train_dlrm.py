@@ -1,0 +1,16 @@
+"""End-to-end training example: a ~100M-parameter DLRM for a few hundred
+steps with the production optimizer mix, prefetching pipeline, async
+checkpointing and restart.
+
+  PYTHONPATH=src python examples/train_dlrm.py --steps 200 --ckpt-dir /tmp/dlrm_ck
+  # kill it mid-run, then rerun with --resume: it continues from the last save
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256.  [arXiv:2407.21783]
+
+Trains with Adafactor (fp32 master + factored stats fit 16 GiB/chip on 256
+chips only with factored state), sequence-parallel residual stream, 14x9
+sqrt-remat.  Serving keeps FSDP sharding: 810 GB of bf16 weights only fit a
+single pod when spread over all 256 chips.
+"""
+from repro.configs.lm_common import register_lm
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="llama3-405b",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab=128256,
+    d_head=128,
+    rope_theta=500000.0,
+    seq_shard=True,
+    remat_groups=14,
+    q_block=512,
+    microbatches=4,
+)
+
+register_lm(
+    "llama3-405b",
+    CONFIG,
+    opt_kind="adafactor",
+    fsdp_serve=True,
+    kind="lm-dense",
+    notes="kv heads (8) replicated across the 16-way model axis (standard GQA "
+    "TP practice).",
+)

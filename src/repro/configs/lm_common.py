@@ -1,0 +1,206 @@
+"""Shared cell builder for the LM-family architectures.
+
+Shape set (assigned): train_4k, prefill_32k, decode_32k, long_500k.
+`decode_*`/`long_*` lower `serve_step` (decode_step with a sequence-sharded
+KV cache), not `train_step`.  long_500k runs with the KV cache sharded over
+(data x model) [+ pod] since batch=1 leaves the data axis free (DESIGN.md §4
+explains why decode at 500k is in-scope for full-attention archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchDef, CellBuild
+from repro.core.sharding import AXIS_DATA, AXIS_MODEL, AXIS_POD
+from repro.data import synthetic as syn
+from repro.models import transformer as T
+from repro.optim import optimizers as opt_lib
+from repro.optim import sharding_rules as opt_specs
+
+SDS = jax.ShapeDtypeStruct
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def make_optimizer(kind: str):
+    if kind == "adam":
+        return opt_lib.make_adam(3e-4), opt_specs.adam_state_specs
+    if kind == "adafactor":
+        return opt_lib.make_adafactor(1e-2), opt_specs.adafactor_state_specs
+    raise ValueError(kind)
+
+
+def build_lm_cell(
+    base_cfg: T.TransformerConfig,
+    opt_kind: str,
+    shape: str,
+    mesh,
+    multi_pod: bool,
+    fsdp_serve: bool = False,
+) -> CellBuild:
+    info = LM_SHAPES[shape]
+    batch_axes = (AXIS_POD, AXIS_DATA) if multi_pod else (AXIS_DATA,)
+    S, B = info["seq"], info["batch"]
+
+    if info["kind"] == "train":
+        cfg = dataclasses.replace(base_cfg, param_dtype=jnp.float32)
+        optimizer, state_spec_fn = make_optimizer(opt_kind)
+        pshapes = T.abstract_params(cfg, mesh)
+        # HSDP: weights/optimizer shard over every data-parallel axis
+        # (pod x data on the multi-pod mesh).
+        pspecs = T.param_specs(cfg, mesh, training=True, fsdp_axes=batch_axes)
+        sshapes = jax.eval_shape(optimizer.init, pshapes)
+        sspecs = state_spec_fn(pspecs, pshapes)
+        batch_abs = {
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+        bspecs = {
+            "tokens": P(batch_axes, None),
+            "labels": P(batch_axes, None),
+        }
+        from jax.sharding import NamedSharding
+
+        grad_specs = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        step = T.make_train_step(
+            cfg, optimizer, mesh, batch_axes, grad_specs=grad_specs
+        )
+        return CellBuild(
+            "train_step",
+            step,
+            (pshapes, sshapes, batch_abs),
+            (pspecs, sspecs, bspecs),
+            donate_argnums=(0, 1),
+        )
+
+    # Serving cells: bf16 weights; big archs keep FSDP-style sharding so the
+    # weights fit one pod (noted in EXPERIMENTS.md).
+    cfg = dataclasses.replace(
+        base_cfg, param_dtype=jnp.bfloat16, fsdp=fsdp_serve, microbatches=1
+    )
+    pshapes = T.abstract_params(cfg, mesh)
+    pspecs = T.param_specs(cfg, mesh, training=fsdp_serve, fsdp_axes=batch_axes)
+
+    if info["kind"] == "prefill":
+        tokens_abs = SDS((B, S), jnp.int32)
+
+        def prefill_step(params, tokens):
+            return T.prefill(cfg, params, tokens, mesh, batch_axes)
+
+        return CellBuild(
+            "serve_prefill",
+            prefill_step,
+            (pshapes, tokens_abs),
+            (pspecs, P(batch_axes, None)),
+        )
+
+    # decode
+    if B == 1:
+        dec_batch_axes: tuple[str, ...] = ()
+        seq_axes = tuple(mesh.axis_names)  # (pod,)data,model
+    else:
+        dec_batch_axes = batch_axes
+        seq_axes = (AXIS_MODEL,)
+    cache_abs = tuple(
+        SDS((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16)
+        for _ in range(2)
+    )
+    cspec = T.cache_specs(cfg, dec_batch_axes, seq_axes)
+    tok_spec = P(dec_batch_axes) if dec_batch_axes else P(None)
+
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(
+            cfg, params, cache, tokens, pos, mesh, dec_batch_axes, seq_axes
+        )
+
+    return CellBuild(
+        "serve_decode",
+        serve_step,
+        (pshapes, cache_abs, SDS((B,), jnp.int32), SDS((), jnp.int32)),
+        (pspecs, (cspec, cspec), tok_spec, P()),
+        donate_argnums=(1,),
+    )
+
+
+def lm_smoke(base_cfg: T.TransformerConfig, opt_kind: str = "adam"):
+    """Reduced-config smoke: same family, tiny dims; one train step + one
+    decode step on CPU, asserting shapes and finiteness."""
+    moe = base_cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, num_experts=4, top_k=min(2, moe.top_k), d_ff=32)
+    cfg = dataclasses.replace(
+        base_cfg,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, base_cfg.n_kv_heads * 4 // base_cfg.n_heads),
+        d_head=16,
+        d_ff=128,
+        vocab=256,
+        moe=moe,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.float32,
+        seq_shard=False,
+        remat_groups=2,
+        fsdp=False,
+        q_block=8,
+    )
+    rng = np.random.default_rng(0)
+    params = T.init_params(cfg, jax.random.key(0))
+    optimizer, _ = make_optimizer(opt_kind)
+    state = optimizer.init(params)
+    batch = {k: jnp.asarray(v) for k, v in syn.lm_batch(rng, cfg.vocab, 4, 16).items()}
+    step = jax.jit(T.make_train_step(cfg, optimizer, None))
+    params, state, metrics = step(params, state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), "train loss must be finite"
+
+    cache = T.init_decode_cache(cfg, 4, 32, jnp.float32)
+    logits, cache = jax.jit(
+        lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos, None)
+    )(params, cache, batch["tokens"][:, 0], jnp.asarray(0, jnp.int32))
+    assert logits.shape == (4, cfg.padded_vocab(None))
+    assert bool(jnp.all(jnp.isfinite(logits))), "decode logits finite"
+    return {"loss": loss, "logits_shape": tuple(logits.shape)}
+
+
+def register_lm(
+    arch_id: str,
+    base_cfg: T.TransformerConfig,
+    opt_kind: str,
+    fsdp_serve: bool,
+    kind: str,
+    notes: str = "",
+):
+    from repro.configs import register
+
+    return register(
+        ArchDef(
+            id=arch_id,
+            kind=kind,
+            shapes=tuple(LM_SHAPES),
+            build_cell=functools.partial(
+                _build, base_cfg=base_cfg, opt_kind=opt_kind, fsdp_serve=fsdp_serve
+            ),
+            smoke=functools.partial(lm_smoke, base_cfg, opt_kind),
+            notes=notes,
+        )
+    )
+
+
+def _build(shape, mesh, multi_pod, *, base_cfg, opt_kind, fsdp_serve):
+    return build_lm_cell(base_cfg, opt_kind, shape, mesh, multi_pod, fsdp_serve)

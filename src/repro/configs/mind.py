@@ -1,0 +1,30 @@
+"""mind [recsys]: embed_dim=64 n_interests=4 capsule_iters=3,
+interaction=multi-interest.  [arXiv:1904.08030]
+
+One 20M-row item table; user behaviour sequences of length 50 feed B2I
+capsule routing.  Retrieval scores 1M candidates against the 4 interests.
+"""
+from repro.configs.recsys_common import register_recsys
+from repro.core.sharding import TableSpec
+from repro.models.recsys import RecsysConfig
+
+
+def make_config() -> RecsysConfig:
+    return RecsysConfig(
+        name="mind",
+        arch="mind",
+        tables=(TableSpec("item", 20_000_000, nnz=1),),
+        embed_dim=64,
+        n_interests=4,
+        capsule_iters=3,
+        hist_len=50,
+        mode="hierarchical",
+    )
+
+
+register_recsys(
+    "mind",
+    make_config,
+    notes="Needs raw (unpooled) rows for capsule routing -> exercises the "
+    "fig-4(a) row-level lookup path by necessity (lookup_rows).",
+)

@@ -1,0 +1,217 @@
+"""Shared cell builder for the recsys architectures (the paper's workload).
+
+Shapes: train_batch (65,536), serve_p99 (512), serve_bulk (262,144),
+retrieval_cand (1 query x 1,000,000 candidates — padded to 1,000,448 =
+512 x 1954 so the candidate set divides both meshes; padding noted in
+EXPERIMENTS.md).
+
+Training uses the production optimizer mix: rowwise AdaGrad on embedding
+tables (state is O(rows)) + Adam on the dense NN, composed via
+optim.make_composite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchDef, CellBuild
+from repro.core.sharding import AXIS_DATA, AXIS_MODEL, AXIS_POD, TableSpec
+from repro.data import synthetic as syn
+from repro.models import recsys as R
+from repro.optim import optimizers as opt_lib
+from repro.optim import sharding_rules as opt_specs
+
+SDS = jax.ShapeDtypeStruct
+
+N_CANDIDATES = 1_000_448  # 1e6 padded to divide 512 devices
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=N_CANDIDATES),
+}
+
+OPT_RULES = [("emb|wide", "rowwise"), (".*", "adam")]
+
+
+def make_recsys_optimizer():
+    return opt_lib.make_composite(
+        [("emb|wide", opt_lib.make_rowwise_adagrad(0.05)),
+         (".*", opt_lib.make_adam(1e-3))]
+    )
+
+
+def batch_abstract(cfg: R.RecsysConfig, batch: int, batch_axes, train: bool):
+    F, nnz = cfg.num_fields, cfg.max_nnz
+    abs_, specs = {}, {}
+    if cfg.arch == "mind":
+        abs_ = {
+            "hist": SDS((batch, cfg.hist_len), jnp.int32),
+            "hist_mask": SDS((batch, cfg.hist_len), jnp.bool_),
+            "target": SDS((batch,), jnp.int32),
+        }
+        specs = {
+            "hist": P(batch_axes, None),
+            "hist_mask": P(batch_axes, None),
+            "target": P(batch_axes),
+        }
+    else:
+        abs_ = {
+            "indices": SDS((batch, F, nnz), jnp.int32),
+            "mask": SDS((batch, F, nnz), jnp.bool_),
+        }
+        specs = {
+            "indices": P(batch_axes, None, None),
+            "mask": P(batch_axes, None, None),
+        }
+        if cfg.n_dense:
+            abs_["dense"] = SDS((batch, cfg.n_dense), jnp.float32)
+            specs["dense"] = P(batch_axes, None)
+    if train:
+        abs_["labels"] = SDS((batch,), jnp.float32)
+        specs["labels"] = P(batch_axes)
+    return abs_, specs
+
+
+def build_recsys_cell(
+    cfg: R.RecsysConfig, shape: str, mesh, multi_pod: bool
+) -> CellBuild:
+    info = RECSYS_SHAPES[shape]
+    batch_axes = (AXIS_POD, AXIS_DATA) if multi_pod else (AXIS_DATA,)
+    num_shards = cfg.num_shards_for(mesh)
+    B = info["batch"]
+
+    pshapes = R.abstract_params(cfg, num_shards)
+    pspecs = R.param_specs(cfg, num_shards, batch_axes)
+
+    if info["kind"] == "train":
+        optimizer = make_recsys_optimizer()
+        sshapes = jax.eval_shape(optimizer.init, pshapes)
+        sspecs = opt_specs.composite_state_specs(OPT_RULES, pspecs, pshapes)
+        batch_abs, bspecs = batch_abstract(cfg, B, batch_axes, train=True)
+        step = R.make_train_step(cfg, optimizer, mesh, batch_axes)
+        return CellBuild(
+            "train_step",
+            step,
+            (pshapes, sshapes, batch_abs),
+            (pspecs, sspecs, bspecs),
+            donate_argnums=(0, 1),
+        )
+
+    if info["kind"] == "serve":
+        batch_abs, bspecs = batch_abstract(cfg, B, batch_axes, train=False)
+
+        def serve_step(params, batch):
+            return R.forward(cfg, params, batch, mesh, batch_axes)
+
+        return CellBuild(
+            "serve_step", serve_step, (pshapes, batch_abs), (pspecs, bspecs)
+        )
+
+    # retrieval_cand
+    N = info["n_candidates"]
+    if cfg.arch == "two_tower":
+        batch_abs, bspecs = batch_abstract(cfg, 8, (), train=False)
+        cand_abs = SDS((N, cfg.mlp[-1]), jnp.float32)
+        cand_spec = P(tuple(mesh.axis_names), None)
+
+        def retrieval_step(params, batch, candidates):
+            return R.retrieval_topk(
+                cfg, params, batch, candidates, k=100, mesh=mesh, batch_axes=()
+            )
+
+        return CellBuild(
+            "retrieval",
+            retrieval_step,
+            (pshapes, batch_abs, cand_abs),
+            (pspecs, bspecs, cand_spec),
+        )
+
+    if cfg.arch == "mind":
+        batch_abs = {
+            "hist": SDS((1, cfg.hist_len), jnp.int32),
+            "hist_mask": SDS((1, cfg.hist_len), jnp.bool_),
+            "cand_ids": SDS((N,), jnp.int32),
+        }
+        bspecs = {
+            "hist": P(None, None),
+            "hist_mask": P(None, None),
+            "cand_ids": P(batch_axes),
+        }
+
+        def retrieval_step(params, batch):
+            return R.mind_retrieval(
+                cfg, params, batch, k=100, mesh=mesh, batch_axes=batch_axes
+            )
+
+        return CellBuild(
+            "retrieval", retrieval_step, (pshapes, batch_abs), (pspecs, bspecs)
+        )
+
+    # ranking archs: retrieval = bulk-score N candidates through the full model
+    batch_abs, bspecs = batch_abstract(cfg, N, batch_axes, train=False)
+
+    def retrieval_step(params, batch):
+        scores = R.forward(cfg, params, batch, mesh, batch_axes)
+        return jax.lax.top_k(scores, 100)
+
+    return CellBuild(
+        "retrieval", retrieval_step, (pshapes, batch_abs), (pspecs, bspecs)
+    )
+
+
+def recsys_smoke(cfg_fn):
+    """Reduced config: tiny vocabs, one train + one serve step on CPU."""
+    cfg = cfg_fn()
+    tables = tuple(
+        dataclasses.replace(t, vocab=max(32, t.vocab % 97 + 32))
+        for t in cfg.tables[:4]
+    )
+    cfg = dataclasses.replace(cfg, tables=tables)
+    rng = np.random.default_rng(0)
+    params = R.init_params(cfg, jax.random.key(0), num_shards=1)
+    optimizer = make_recsys_optimizer()
+    state = optimizer.init(params)
+    if cfg.arch == "mind":
+        batch = {
+            k: jnp.asarray(v)
+            for k, v in syn.mind_batch(rng, tables[0].vocab, 8, cfg.hist_len).items()
+        }
+    else:
+        batch = {
+            k: jnp.asarray(v)
+            for k, v in syn.recsys_batch(rng, tables, 8, n_dense=cfg.n_dense).items()
+        }
+    step = jax.jit(R.make_train_step(cfg, optimizer, None))
+    params, state, metrics = step(params, state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss)
+    scores = jax.jit(lambda p, b: R.forward(cfg, p, b, None))(params, batch)
+    assert scores.shape == (8,)
+    assert bool(jnp.all(jnp.isfinite(scores)))
+    return {"loss": loss, "scores_shape": tuple(scores.shape)}
+
+
+def register_recsys(arch_id: str, cfg_fn, notes: str = ""):
+    from repro.configs import register
+
+    return register(
+        ArchDef(
+            id=arch_id,
+            kind="recsys",
+            shapes=tuple(RECSYS_SHAPES),
+            build_cell=functools.partial(_build, cfg_fn=cfg_fn),
+            smoke=functools.partial(recsys_smoke, cfg_fn),
+            notes=notes,
+        )
+    )
+
+
+def _build(shape, mesh, multi_pod, *, cfg_fn):
+    return build_recsys_cell(cfg_fn(), shape, mesh, multi_pod)

@@ -1,0 +1,54 @@
+"""FlexEMR core: disaggregated embedding serving primitives.
+
+The paper's contribution, as composable JAX modules:
+  sharding        — range-based routing + row-wise table sharding (§3.1.2)
+  embedding       — DisaggEmbedding: baseline / hierarchical / cached lookups
+  adaptive_cache  — load-aware cache sizing controller (§3.1.1)
+  lookup_engine   — multi-threaded host engine + SPMD chunked lookups (§3.2)
+  flow_control    — credit-based flow control w/ priority channel (§3.2)
+  migration       — live connection migration + elastic resharding (§3.2)
+"""
+from repro.core.adaptive_cache import (
+    AdaptiveCacheController,
+    CachePlan,
+    EmaFrequencyTracker,
+    MemoryModel,
+    SlidingWindowLoadMonitor,
+)
+from repro.core.embedding import (
+    DisaggEmbedding,
+    HotCacheState,
+    empty_cache,
+    make_cache_from_table,
+)
+from repro.core.lookup_engine import HostLookupService, chunked_lookup
+from repro.core.sharding import (
+    AXIS_DATA,
+    AXIS_MODEL,
+    AXIS_POD,
+    FusedTables,
+    RangeRouter,
+    TableSpec,
+    make_fused_tables,
+)
+
+__all__ = [
+    "AdaptiveCacheController",
+    "CachePlan",
+    "EmaFrequencyTracker",
+    "MemoryModel",
+    "SlidingWindowLoadMonitor",
+    "DisaggEmbedding",
+    "HotCacheState",
+    "empty_cache",
+    "make_cache_from_table",
+    "HostLookupService",
+    "chunked_lookup",
+    "AXIS_DATA",
+    "AXIS_MODEL",
+    "AXIS_POD",
+    "FusedTables",
+    "RangeRouter",
+    "TableSpec",
+    "make_fused_tables",
+]

@@ -1,0 +1,197 @@
+"""Adaptive embedding cache controller (paper §3.1.1).
+
+The paper's control loop, reproduced structurally:
+
+  1. **Tracing temporal dynamics** — a sliding window over recent request
+     batch sizes decides whether the system is under high load.
+  2. **Adjusting cache size** — an *NN-memory model* estimates the memory the
+     dense model needs for the current batch; the ideal cache size is the
+     HBM capacity minus that reservation.  Swap-in fetches hot rows from the
+     embedding shards (async on real hardware; here a jitted gather);
+     swap-out evicts by LRU/low-frequency.
+
+On TPU the contended memory is per-chip HBM (16 GiB on v5e): replicated hot
+rows compete with activation memory exactly like the paper's GPU cache
+competes with NN batch memory.  The controller additionally decides
+*field-level replication* — fields whose whole vocab fits the budget are
+replicated outright, which shrinks the lookup collective statically.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.sharding import TableSpec
+
+HBM_BYTES_V5E = 16 * 1024**3
+
+
+@dataclasses.dataclass
+class MemoryModel:
+    """Estimates per-chip memory for the dense model at a given batch size.
+
+    `bytes_per_sample` covers activations of the NN stack (bottom MLP,
+    interaction, top MLP / transformer activations) per sample on this chip;
+    `fixed_bytes` covers weights + optimizer + workspace.  Both are measured
+    once from a compiled step's memory_analysis() and then reused, which is
+    exactly the "build a model to estimate the memory size required by NN
+    computation" step of §3.1.1.
+    """
+
+    fixed_bytes: int
+    bytes_per_sample: int
+    hbm_bytes: int = HBM_BYTES_V5E
+    reserve_frac: float = 0.08  # XLA workspace / fragmentation headroom
+
+    def nn_bytes(self, batch_size: int) -> int:
+        return self.fixed_bytes + self.bytes_per_sample * batch_size
+
+    def cache_budget_bytes(self, batch_size: int) -> int:
+        usable = int(self.hbm_bytes * (1.0 - self.reserve_frac))
+        return max(0, usable - self.nn_bytes(batch_size))
+
+    def max_batch_given_cache(self, cache_bytes: int) -> int:
+        usable = int(self.hbm_bytes * (1.0 - self.reserve_frac))
+        room = usable - self.fixed_bytes - cache_bytes
+        return max(0, room // max(1, self.bytes_per_sample))
+
+
+class SlidingWindowLoadMonitor:
+    """§3.1.1 'Tracing temporal dynamics': load level from recent batch sizes."""
+
+    def __init__(self, window: int = 64, high_frac: float = 0.8):
+        self.window = collections.deque(maxlen=window)
+        self.high_frac = high_frac
+
+    def observe(self, batch_size: int) -> None:
+        self.window.append(int(batch_size))
+
+    @property
+    def smoothed_batch(self) -> float:
+        return float(np.mean(self.window)) if self.window else 0.0
+
+    def is_high_load(self, max_batch: int) -> bool:
+        return bool(self.window) and self.smoothed_batch >= self.high_frac * max_batch
+
+
+class EmaFrequencyTracker:
+    """Decayed access counts per fused row id — the hot-set estimator.
+
+    Tracks only rows seen so far (sparse dict of numpy accumulators would be
+    slow in pure python for large batches; we aggregate with np.unique).
+    """
+
+    def __init__(self, decay: float = 0.96):
+        self.decay = decay
+        self._ids = np.zeros((0,), np.int64)
+        self._score = np.zeros((0,), np.float64)
+
+    def update(self, row_ids: np.ndarray) -> None:
+        ids, counts = np.unique(np.asarray(row_ids).ravel(), return_counts=True)
+        self._score *= self.decay
+        merged_ids = np.union1d(self._ids, ids)
+        score = np.zeros(merged_ids.shape, np.float64)
+        score[np.searchsorted(merged_ids, self._ids)] = self._score
+        score[np.searchsorted(merged_ids, ids)] += counts
+        self._ids, self._score = merged_ids, score
+        # Bound the tracker's own memory: keep the top 4M rows.
+        if len(self._ids) > 4_000_000:
+            keep = np.argsort(self._score)[-2_000_000:]
+            keep.sort()
+            self._ids, self._score = self._ids[keep], self._score[keep]
+
+    def top_k(self, k: int) -> np.ndarray:
+        if k <= 0 or len(self._ids) == 0:
+            return np.zeros((0,), np.int64)
+        k = min(k, len(self._ids))
+        top = np.argpartition(self._score, -k)[-k:]
+        return self._ids[top]
+
+    def hot_fraction_covered(self, k: int) -> float:
+        """Fraction of (decayed) traffic the top-k rows would absorb."""
+        if len(self._ids) == 0:
+            return 0.0
+        total = self._score.sum()
+        if total <= 0:
+            return 0.0
+        k = min(k, len(self._ids))
+        top = np.partition(self._score, -k)[-k:]
+        return float(top.sum() / total)
+
+
+@dataclasses.dataclass
+class CachePlan:
+    """Output of the controller: what the lookup layer should replicate."""
+
+    capacity_rows: int  # row-level hot cache size (0 = disabled)
+    hot_ids: np.ndarray  # fused row ids to pin (len <= capacity_rows)
+    replicated_fields: tuple[int, ...]  # fields whose whole vocab is replicated
+    reason: str = ""
+
+
+class AdaptiveCacheController:
+    """Combines monitor + memory model + tracker into the §3.1.1 policy."""
+
+    def __init__(
+        self,
+        specs: Sequence[TableSpec],
+        dim: int,
+        memory_model: MemoryModel,
+        bytes_per_row: int | None = None,
+        monitor: SlidingWindowLoadMonitor | None = None,
+        tracker: EmaFrequencyTracker | None = None,
+        min_rows: int = 0,
+        max_rows: int = 2_000_000,
+        field_replication: bool = True,
+    ):
+        self.specs = tuple(specs)
+        self.dim = dim
+        self.memory_model = memory_model
+        self.bytes_per_row = bytes_per_row or dim * 4
+        self.monitor = monitor or SlidingWindowLoadMonitor()
+        self.tracker = tracker or EmaFrequencyTracker()
+        self.min_rows = min_rows
+        self.max_rows = max_rows
+        self.field_replication = field_replication
+
+    def observe(self, batch_size: int, row_ids: np.ndarray) -> None:
+        self.monitor.observe(batch_size)
+        self.tracker.update(row_ids)
+
+    def plan(self, current_batch: int) -> CachePlan:
+        budget = self.memory_model.cache_budget_bytes(
+            max(current_batch, int(self.monitor.smoothed_batch))
+        )
+        rows_budget = budget // self.bytes_per_row
+
+        replicated: list[int] = []
+        if self.field_replication:
+            # Greedily replicate the smallest-vocab fields: whole-field
+            # replication removes those fields from the collective entirely
+            # (static win), so small fields are the best bytes-per-benefit.
+            order = sorted(range(len(self.specs)), key=lambda i: self.specs[i].vocab)
+            for i in order:
+                need = self.specs[i].vocab
+                if need <= rows_budget // 2:  # spend at most half budget on fields
+                    replicated.append(i)
+                    rows_budget -= need
+                else:
+                    break
+
+        capacity = int(np.clip(rows_budget, self.min_rows, self.max_rows))
+        # Round to a lane-friendly multiple; keep 0 if starved.
+        capacity = (capacity // 128) * 128
+        hot = self.tracker.top_k(capacity)
+        reason = (
+            f"budget={budget>>20}MiB rows={capacity} rep_fields={replicated} "
+            f"load={self.monitor.smoothed_batch:.0f}"
+        )
+        return CachePlan(
+            capacity_rows=capacity,
+            hot_ids=hot,
+            replicated_fields=tuple(sorted(replicated)),
+            reason=reason,
+        )

@@ -1,0 +1,307 @@
+"""Multi-threaded embedding lookup engine (paper §3.2, T4).
+
+Two layers, mirroring the two places the paper's idea lands on TPU systems:
+
+**Host layer (faithful to the paper's CPU embedding servers).**  Embedding
+shards live in host DRAM as numpy arrays (`EmbeddingServer` = one embedding
+server).  A pool of `RdmaEngine` I/O threads posts lookup subrequests over
+per-server `Connection`s.  The RNIC's limited parallelism units are modeled as
+locks: every post must hold its connection's unit.  With the *naive* mapping
+(units assigned to connections round-robin at creation, engines unaware),
+connections on different engines share units and serialize — the contention of
+paper Fig 6 (left).  With the *mapping-aware* assignment, connections are
+grouped by unit so each engine owns its units exclusively (Fig 6 right).
+
+**SPMD layer.**  Inside a jitted step there are no threads; the counterpart of
+"multiple engines posting concurrently" is *chunked lookups*: the fields are
+split into groups whose collectives are independent, so XLA's latency-hiding
+scheduler can overlap them with dense compute (and with each other).
+`chunked_lookup` provides that schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import DisaggEmbedding, HotCacheState
+from repro.core.sharding import FusedTables, RangeRouter
+
+# --------------------------------------------------------------------- host
+
+
+class EmbeddingServer:
+    """One embedding server: a row-range shard resident in host DRAM."""
+
+    def __init__(self, shard_id: int, start_row: int, rows: np.ndarray):
+        self.shard_id = shard_id
+        self.start_row = start_row
+        self.rows = rows  # [rows_per_shard, D]
+
+    def lookup_rows(self, row_ids: np.ndarray) -> np.ndarray:
+        """Fig 4(a): return raw embedding rows (bytes ~ len(row_ids) * D)."""
+        return self.rows[row_ids - self.start_row]
+
+    def lookup_pooled(
+        self, row_ids: np.ndarray, bag_ids: np.ndarray, num_bags: int
+    ) -> np.ndarray:
+        """Fig 4(b): partial pooling pushed down to the server's CPU.
+
+        Returns [num_bags, D] partial sums (bytes ~ num_bags * D).
+        """
+        out = np.zeros((num_bags, self.rows.shape[1]), self.rows.dtype)
+        np.add.at(out, bag_ids, self.rows[row_ids - self.start_row])
+        return out
+
+
+@dataclasses.dataclass
+class Subrequest:
+    server: int
+    row_ids: np.ndarray
+    bag_ids: np.ndarray
+    num_bags: int
+    pushdown: bool
+    result_slot: int
+    done: threading.Event
+    results: list  # shared list, written at result_slot
+
+
+class Connection:
+    """A queue-pair to one embedding server, pinned to an RNIC unit (lock)."""
+
+    def __init__(self, server: EmbeddingServer, unit: threading.Lock):
+        self.server = server
+        self.unit = unit
+        self.pending: queue.SimpleQueue[Subrequest] = queue.SimpleQueue()
+        self.posted = 0  # lifetime posts, for load accounting
+
+    def depth(self) -> int:
+        return self.pending.qsize()
+
+
+class RdmaEngine(threading.Thread):
+    """One I/O thread draining its connections' subrequest queues."""
+
+    def __init__(self, engine_id: int):
+        super().__init__(daemon=True, name=f"rdma-engine-{engine_id}")
+        self.engine_id = engine_id
+        self.connections: list[Connection] = []
+        self._wake = threading.Event()
+        self._stop = False
+        self._lock = threading.Lock()  # guards self.connections (migration)
+
+    def attach(self, conn: Connection) -> None:
+        with self._lock:
+            self.connections.append(conn)
+        self._wake.set()
+
+    def detach(self, conn: Connection) -> None:
+        with self._lock:
+            self.connections.remove(conn)
+
+    def submit(self, conn: Connection, req: Subrequest) -> None:
+        conn.pending.put(req)
+        conn.posted += 1
+        self._wake.set()
+
+    def run(self) -> None:
+        while not self._stop:
+            worked = False
+            with self._lock:
+                conns = list(self.connections)
+            for conn in conns:
+                try:
+                    req = conn.pending.get_nowait()
+                except queue.Empty:
+                    continue
+                worked = True
+                # Posting a work request requires exclusive access to the
+                # RNIC parallelism unit. Cross-engine sharing => contention.
+                with conn.unit:
+                    srv = conn.server
+                    if req.pushdown:
+                        res = srv.lookup_pooled(req.row_ids, req.bag_ids, req.num_bags)
+                    else:
+                        res = (srv.lookup_rows(req.row_ids), req.bag_ids)
+                req.results[req.result_slot] = res
+                req.done.set()
+            if not worked:
+                self._wake.wait(timeout=0.001)
+                self._wake.clear()
+
+    def stop(self) -> None:
+        self._stop = True
+        self._wake.set()
+
+
+class HostLookupService:
+    """The ranker-side lookup frontend over host embedding servers.
+
+    mapping_aware=False reproduces the naive engine: RNIC units are assigned
+    to connections round-robin (as NICs do at creation time) and connections
+    are dealt to engines round-robin *independently*, so engines contend on
+    shared units. mapping_aware=True groups connections by unit onto the same
+    engine (FlexEMR).
+    """
+
+    def __init__(
+        self,
+        tables: FusedTables,
+        table_array: np.ndarray,
+        num_engines: int = 4,
+        num_units: int | None = None,
+        mapping_aware: bool = True,
+        pushdown: bool = True,
+    ):
+        self.tables = tables
+        self.router = RangeRouter(tables)
+        self.pushdown = pushdown
+        rps = tables.rows_per_shard
+        self.servers = [
+            EmbeddingServer(s, s * rps, table_array[s * rps : (s + 1) * rps])
+            for s in range(tables.num_shards)
+        ]
+        num_units = num_units or num_engines
+        self.units = [threading.Lock() for _ in range(num_units)]
+        # RNIC behaviour: units round-robin over connections at creation.
+        self.connections = [
+            Connection(srv, self.units[i % num_units])
+            for i, srv in enumerate(self.servers)
+        ]
+        self.engines = [RdmaEngine(e) for e in range(num_engines)]
+        self.conn_engine: dict[Connection, RdmaEngine] = {}
+        if mapping_aware:
+            # Group connections by their unit; a unit's group lives on one engine.
+            unit_ids = {id(u): i for i, u in enumerate(self.units)}
+            for conn in self.connections:
+                eng = self.engines[unit_ids[id(conn.unit)] % num_engines]
+                eng.attach(conn)
+                self.conn_engine[conn] = eng
+        else:
+            for i, conn in enumerate(self.connections):
+                eng = self.engines[i % num_engines]
+                eng.attach(conn)
+                self.conn_engine[conn] = eng
+        for e in self.engines:
+            e.start()
+
+    def close(self) -> None:
+        for e in self.engines:
+            e.stop()
+        for e in self.engines:
+            e.join(timeout=1.0)
+
+    def lookup(
+        self, indices: np.ndarray, mask: np.ndarray
+    ) -> np.ndarray:
+        """[B,F,nnz] -> [B,F,D] pooled. Fans subrequests out per server."""
+        B, F, NNZ = indices.shape
+        offs = self.tables.field_offsets_array()
+        fused = (indices.astype(np.int64) + offs[None, :, None]).ravel()
+        bag = np.broadcast_to(
+            (np.arange(B * F) // 1).reshape(B, F, 1), (B, F, NNZ)
+        ).ravel()
+        valid = mask.ravel()
+        fused, bag = fused[valid], bag[valid]
+        shard = self.router.shard_of(fused)
+        num_bags = B * F
+        D = self.servers[0].rows.shape[1]
+
+        order = np.argsort(shard, kind="stable")
+        fused, bag, shard = fused[order], bag[order], shard[order]
+        bounds = np.searchsorted(shard, np.arange(self.tables.num_shards + 1))
+
+        reqs: list[Subrequest] = []
+        results: list = [None] * self.tables.num_shards
+        for s in range(self.tables.num_shards):
+            lo, hi = bounds[s], bounds[s + 1]
+            if lo == hi:
+                continue
+            req = Subrequest(
+                server=s,
+                row_ids=fused[lo:hi],
+                bag_ids=bag[lo:hi],
+                num_bags=num_bags,
+                pushdown=self.pushdown,
+                result_slot=s,
+                done=threading.Event(),
+                results=results,
+            )
+            conn = self.connections[s]
+            self.conn_engine[conn].submit(conn, req)
+            reqs.append(req)
+        for r in reqs:
+            r.done.wait()
+
+        out = np.zeros((num_bags, D), np.float32)
+        for s, res in enumerate(results):
+            if res is None:
+                continue
+            if self.pushdown:
+                out += res  # global combine of partial pools (fig 4b)
+            else:
+                rows, bags = res  # ranker-side pooling (fig 4a)
+                np.add.at(out, bags, rows)
+        # Mean-pool fields divide by their valid counts.
+        out = out.reshape(B, F, D)
+        counts = mask.sum(-1).astype(np.float32)
+        mean_mask = np.asarray([s.pooling == "mean" for s in self.tables.specs])
+        denom = np.maximum(counts, 1.0)[..., None]
+        return np.where(mean_mask[None, :, None], out / denom, out)
+
+    def network_bytes(self, indices: np.ndarray, mask: np.ndarray) -> int:
+        """Response bytes on the wire (the paper's Fig-4 quantity).
+
+        Wire format is sparse: each entry is <bag_id:4B, vector:D*itemsize>.
+        fig 4(a) raw mode sends one entry per *row hit*; fig 4(b) pushdown
+        sends one entry per (server, bag) with >=1 hit — the partial pool.
+        Pushdown <= raw always, with equality at one hit per (server, bag).
+        """
+        B, F, _ = indices.shape
+        D = self.servers[0].rows.shape[1]
+        entry = 4 + D * self.servers[0].rows.dtype.itemsize
+        offs = self.tables.field_offsets_array()
+        fused = indices.astype(np.int64) + offs[None, :, None]
+        shard = np.where(mask, self.router.shard_of(fused), -1)
+        if self.pushdown:
+            bag = np.broadcast_to(
+                np.arange(B * F).reshape(B, F, 1), shard.shape
+            )
+            pairs = np.stack([shard.ravel(), bag.ravel()], 1)[mask.ravel()]
+            return len(np.unique(pairs, axis=0)) * entry
+        return int(mask.sum()) * entry
+
+
+# --------------------------------------------------------------------- SPMD
+
+
+def chunked_lookup(
+    emb: DisaggEmbedding,
+    params: dict,
+    indices: jax.Array,
+    mask: jax.Array,
+    mesh,
+    num_chunks: int,
+    cache: HotCacheState | None = None,
+    batch_axes: tuple[str, ...] = ("data",),
+) -> jax.Array:
+    """Split the F axis into `num_chunks` independent lookups.
+
+    Each chunk's psum is an independent collective, which XLA's latency-hiding
+    scheduler can overlap with dense compute issued between chunks — the SPMD
+    counterpart of multiple RDMA engines working concurrently (§3.2).
+    """
+    return emb.lookup(
+        params,
+        indices,
+        mask,
+        mesh=mesh,
+        cache=cache,
+        batch_axes=batch_axes,
+        num_chunks=num_chunks,
+    )

@@ -1,0 +1,43 @@
+"""DLRM pairwise dot-interaction Pallas kernel: batched gram matrix on the MXU.
+
+Grid tiles the batch; each step loads a [TB, F, D] block into VMEM and runs
+the [F, D] x [D, F] contraction per sample with fp32 accumulation.  F is tiny
+(27-41), so the win is keeping the F*D operand resident and fusing the
+transpose — the XLA baseline materializes x and x^T separately.
+The (cheap) upper-triangle extraction stays outside the kernel (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, out_ref):
+    x = x_ref[...]  # [TB, F, D]
+    out_ref[...] = jax.lax.dot_general(
+        x, x,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def dot_interaction(
+    x: jax.Array,  # [B, F, D]
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, F, D = x.shape
+    block_b = min(block_b, B)
+    assert B % block_b == 0, "batch must divide the block"
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // block_b,),
+        in_specs=[pl.BlockSpec((block_b, F, D), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b, F, F), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, F, F), jnp.float32),
+        interpret=interpret,
+    )(x)

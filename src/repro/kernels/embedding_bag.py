@@ -1,0 +1,64 @@
+"""Fused embedding-bag (gather + pool) Pallas TPU kernel — the paper's hot path.
+
+TPU-native design (DESIGN.md hardware-adaptation): instead of a GPU-style
+warp-per-row gather, rows are streamed HBM->VMEM by the *scalar-prefetch*
+mechanism: the grid is (num_bags, nnz); at step (b, j) the BlockSpec index_map
+reads the prefetched row id `idx[b*nnz+j]` and DMAs exactly that (1, D) row
+block of the table into VMEM while the previous step computes.  Consecutive
+steps that map to the same output block (same bag) keep the accumulator
+resident in VMEM — the pooling is fused into the gather, so a bag's rows never
+round-trip through HBM, which is precisely the hierarchical-pooling insight
+applied at the memory-hierarchy level (pool where the row lands: VMEM).
+
+Weights (0.0 for masked slots; 1/count for mean pooling) ride in VMEM as (1,1)
+blocks on the same schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, w_ref, row_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[0, 0]
+    out_ref[...] += row_ref[...].astype(jnp.float32) * w
+
+
+@functools.partial(jax.jit, static_argnames=("num_bags", "interpret"))
+def embedding_bag(
+    table: jax.Array,  # [V, D]; D should be a multiple of 128
+    indices: jax.Array,  # [N] int32, N = num_bags * nnz
+    weights: jax.Array,  # [N] f32
+    num_bags: int,
+    interpret: bool = False,
+) -> jax.Array:
+    N = indices.shape[0]
+    D = table.shape[1]
+    assert N % num_bags == 0, "fixed-nnz layout required"
+    nnz = N // num_bags
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_bags, nnz),
+        in_specs=[
+            pl.BlockSpec((None, 1, 1), lambda b, j, idx: (0, b * nnz + j, 0)),
+            pl.BlockSpec((1, D), lambda b, j, idx: (idx[b * nnz + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, j, idx: (b, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_bags, D), jnp.float32),
+        interpret=interpret,
+    )(indices, weights.reshape(1, N, 1), table)

@@ -1,0 +1,106 @@
+"""Flash-decoding Pallas kernel: one query token against a long KV cache.
+
+The decode cells are memory-bound on KV streaming (§Roofline); this kernel
+streams the cache HBM->VMEM in bk-sized blocks with online-softmax state in
+VMEM scratch, never materializing [S]-length score rows to HBM.  The valid
+prefix length arrives via scalar prefetch so the same compiled kernel serves
+any cache fill level.  GQA: the q heads of one KV head (a group of g) are
+processed together as an [g, dh] tile — MXU-shaped for g>=8.
+
+This is the single-chip counterpart of models/layers.flash_decode_shard
+(which adds the cross-shard logsumexp combine for sequence-sharded caches).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, bk):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[0]
+    block_start = ki * bk
+
+    @pl.when(block_start < cache_len)
+    def _step():
+        q = q_ref[0]  # [g, dh]
+        k = k_ref[0, :, 0]  # [bk, dh]
+        v = v_ref[0, :, 0]  # [bk, dh]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [g, bk]
+        pos = block_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < cache_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(
+    q: jax.Array,  # [B, H, dh]
+    k_cache: jax.Array,  # [B, S, Hkv, dh]
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # [] int32 valid prefix
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hkv
+    bk = min(block_k, S)
+    assert S % bk == 0
+    scale = 1.0 / math.sqrt(dh)
+    qr = q.reshape(B, Hkv, g, dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, None, g, dh), lambda b, h, j, L: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, j, L: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, j, L: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, None, g, dh), lambda b, h, j, L: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bk=bk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(cache_len.reshape(1).astype(jnp.int32), qr, k_cache, v_cache)
+    return out.reshape(B, H, dh)

@@ -1,0 +1,70 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+`use_pallas=False` (default on this CPU container) routes to the pure-jnp
+reference implementations so the same call sites run everywhere; on real TPU
+hardware the kernels lower natively.  `interpret=True` executes the kernel
+body in Python on CPU — the validation mode the tests sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.dot_interaction import dot_interaction as _dot_pallas
+from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+
+
+def embedding_bag(
+    table, indices, weights, num_bags, *, use_pallas=False, interpret=False
+):
+    if use_pallas or interpret:
+        return _bag_pallas(table, indices, weights, num_bags, interpret=interpret)
+    return ref.embedding_bag_ref(table, indices, weights, num_bags)
+
+
+def bag_lookup(
+    table: jax.Array,
+    indices: jax.Array,  # [B, F, nnz]
+    mask: jax.Array,  # [B, F, nnz]
+    *,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """[B,F,nnz] multi-hot lookup -> [B,F,D] sum-pooled, via the fused kernel."""
+    B, F, nnz = indices.shape
+    flat_idx = indices.reshape(-1).astype(jnp.int32)
+    flat_w = mask.reshape(-1).astype(jnp.float32)
+    out = embedding_bag(
+        table, flat_idx, flat_w, B * F, use_pallas=use_pallas, interpret=interpret
+    )
+    return out.reshape(B, F, table.shape[1])
+
+
+def dot_interaction_triu(
+    x: jax.Array, *, use_pallas: bool = False, interpret: bool = False
+) -> jax.Array:
+    """[B,F,D] -> [B, F*(F+1)/2] upper-triangle (incl. diag) pairwise dots."""
+    if use_pallas or interpret:
+        prods = _dot_pallas(x, interpret=interpret)
+    else:
+        prods = ref.dot_interaction_ref(x)
+    F = x.shape[1]
+    iu, ju = np.triu_indices(F)
+    return prods[:, iu, ju]
+
+
+def flash_attention(
+    q, k, v, *, causal=True, block_q=256, block_k=256,
+    use_pallas=False, interpret=False,
+):
+    if use_pallas or interpret:
+        return _flash_pallas(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            interpret=interpret,
+        )
+    return ref.flash_attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jax.Array,  # [V, D]
+    indices: jax.Array,  # [N] int32 row ids (N = num_bags * nnz)
+    weights: jax.Array,  # [N] f32 per-slot weights (0.0 masks a slot)
+    num_bags: int,
+) -> jax.Array:
+    """[num_bags, D] weighted sums over fixed-nnz bags (FBGEMM TBE semantics)."""
+    rows = jnp.take(table, indices, axis=0).astype(jnp.float32)
+    rows = rows * weights[:, None]
+    nnz = indices.shape[0] // num_bags
+    return rows.reshape(num_bags, nnz, -1).sum(axis=1)
+
+
+def dot_interaction_ref(x: jax.Array) -> jax.Array:
+    """[B, F, D] -> [B, F, F] pairwise dot (gram) matrix, fp32 accumulation."""
+    return jnp.einsum("bfd,bgd->bfg", x, x, preferred_element_type=jnp.float32)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, S, H, dh]
+    k: jax.Array,  # [B, S, Hkv, dh]
+    v: jax.Array,  # [B, S, Hkv, dh]
+    causal: bool = True,
+) -> jax.Array:
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qr = q.reshape(B, S, Hkv, g, dh)
+    scores = jnp.einsum(
+        "bqhgd,bshd->bhgqs", qr, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqs,bshd->bqhgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, S, H, dh).astype(q.dtype)

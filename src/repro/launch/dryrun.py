@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=512", ""
+    )
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, print memory/cost analysis, and dump roofline inputs as JSON.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch wide-deep --shape train_batch
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells, 1 pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _to_shardings(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def run_cell(arch_id: str, shape: str, multi_pod: bool, out_dir=OUT_DIR) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = int(np.prod(list(mesh.shape.values())))
+    arch = configs.get(arch_id)
+    build = arch.build_cell(shape, mesh, multi_pod)
+
+    with mesh:
+        jitted = jax.jit(
+            build.step_fn,
+            in_shardings=_to_shardings(mesh, build.in_shardings),
+            donate_argnums=build.donate_argnums,
+        )
+        lowered = jitted.lower(*build.args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    terms = hlo_analysis.analyze(hlo, n_devices)
+
+    mem_dict = {}
+    if mem is not None:
+        for f in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            mem_dict[f] = int(getattr(mem, f, 0))
+        mem_dict["per_device_total"] = (
+            mem_dict["argument_size_in_bytes"]
+            + mem_dict["output_size_in_bytes"]
+            + mem_dict["temp_size_in_bytes"]
+            - mem_dict["alias_size_in_bytes"]
+        )
+
+    record = {
+        "arch": arch_id,
+        "shape": shape,
+        "mesh": mesh_name,
+        "step": build.step_name,
+        "n_devices": n_devices,
+        "ok": True,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory_analysis": mem_dict,
+        # raw XLA numbers (NOT loop-corrected; see hlo_analysis docstring)
+        "cost_analysis_raw": {
+            k: float(v) for k, v in (cost or {}).items() if np.isscalar(v)
+        },
+        "roofline": terms.as_dict(),
+    }
+
+    print(f"== {arch_id} x {shape} x {mesh_name} [{build.step_name}] ==")
+    print(f"  memory_analysis: {mem}")
+    print(
+        f"  cost: flops/dev={terms.flops_per_device:.3e} "
+        f"bytes/dev={terms.bytes_per_device:.3e} "
+        f"coll_bytes/dev={terms.collective_bytes_per_device:.3e}"
+    )
+    print(
+        f"  roofline: compute={terms.compute_s*1e3:.3f}ms "
+        f"memory={terms.memory_s*1e3:.3f}ms "
+        f"collective={terms.collective_s*1e3:.3f}ms "
+        f"-> {terms.dominant}-bound"
+    )
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = out_dir / f"{arch_id}__{shape}__{mesh_name}.json"
+    fname.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all assigned cells")
+    ap.add_argument("--include-paper-arch", action="store_true")
+    ap.add_argument("--out-dir", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+
+    if args.all:
+        archs = list(configs.ASSIGNED)
+        if args.include_paper_arch:
+            archs.append("dlrm-flexemr")
+    elif args.arch:
+        archs = [args.arch]
+    else:
+        ap.error("--arch or --all required")
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch_id in archs:
+        arch = configs.get(arch_id)
+        shapes = [args.shape] if args.shape else list(arch.shapes)
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch_id, shape, mp, out_dir)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch_id, shape, mp, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

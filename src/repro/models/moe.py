@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer with expert sharding over the `model` axis.
+
+Dispatch strategy (and its FlexEMR connection): token activations are
+replicated across the `model` axis (they are sharded over `data` only), so
+every expert shard can *locally* select the tokens routed to its experts,
+run its expert FFNs, and contribute a partial token-output; one psum over
+`model` combines the partials.  That is the paper's hierarchical-pooling
+pattern applied to expert fan-out — each "server" (expert shard) reduces what
+it owns and only [T, D]-sized partials cross the network, never the dispatched
+[E, C, D] buffers.  (DESIGN.md §Arch-applicability.)
+
+Routing uses the standard capacity-factor top-k scheme with in-shard ranking
+(sort-free: ranks via cumsum over the one-hot expert assignment), dropping
+overflow tokens, plus the Switch-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden dim
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+
+def moe_init(key, cfg: MoEConfig, d_model: int, dtype=jnp.float32) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    E, F = cfg.num_experts, cfg.d_ff
+    return {
+        "router": dense_init(kr, d_model, E, dtype),
+        "w_gate": jax.random.normal(kg, (E, d_model, F), dtype) / math.sqrt(d_model),
+        "w_up": jax.random.normal(ku, (E, d_model, F), dtype) / math.sqrt(d_model),
+        "w_down": jax.random.normal(kd, (E, F, d_model), dtype) / math.sqrt(F),
+    }
+
+
+def moe_capacity(cfg: MoEConfig, tokens: int) -> int:
+    cap = int(math.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe_apply_local(
+    params: dict,
+    x: jax.Array,  # [T, D] — this data-shard's tokens (replicated over model)
+    cfg: MoEConfig,
+    num_expert_shards: int,
+    expert_shard: jax.Array | None,  # axis_index on `model`, or None (single dev)
+):
+    """Returns (partial_out [T, D], aux_loss).  partial_out must be psum'd
+    over the `model` axis by the caller (hierarchical combine).
+
+    When expert_shard is not None, params' expert weights must already be the
+    LOCAL shard: w_gate/w_up [E_loc, D, F], w_down [E_loc, F, D] (shard_map
+    slices them via in_specs).  The router is always replicated.
+    """
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    E_loc = E // num_expert_shards
+    C = moe_capacity(cfg, T)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # [T, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: fraction of tokens per expert * mean router prob.
+    me = probs.mean(axis=0)  # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[top_e[:, 0]].add(1.0) / T
+    aux = cfg.aux_loss_weight * E * jnp.sum(me * ce)
+
+    # Intra-expert rank of each (token, k) assignment, sort-free: per-k
+    # cumulative counts with a carried base, so no [T*K, D] gather and no
+    # [T*K, E] one-hot ever materializes (memory: K x [T, E] int32 chunks).
+    base = jnp.zeros((E,), jnp.int32)
+    slots = []
+    for kk in range(K):
+        onehot = jax.nn.one_hot(top_e[:, kk], E, dtype=jnp.int32)  # [T, E]
+        ranks = jnp.cumsum(onehot, axis=0) - onehot + base[None, :]
+        rank = (ranks * onehot).sum(-1)  # [T]
+        base = base + onehot.sum(0)
+        keep = rank < C
+        e_k = top_e[:, kk]
+        if expert_shard is None:
+            local_mask = keep
+            local_e = e_k
+        else:
+            local_mask = keep & (e_k // E_loc == expert_shard)
+            local_e = e_k - expert_shard * E_loc
+        slots.append(jnp.where(local_mask, local_e * C + rank, E_loc * C))
+
+    # Scatter tokens into the local dispatch buffer [E_loc * C + 1, D];
+    # slots are globally unique, so per-k .set() passes are exact.
+    buf = jnp.zeros((E_loc * C + 1, D), x.dtype)
+    for kk in range(K):
+        buf = buf.at[slots[kk]].set(x)
+    buf = buf[: E_loc * C].reshape(E_loc, C, D)
+
+    # Expert FFNs (SwiGLU) over this shard's (already-local) experts.
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    assert wg.shape[0] == E_loc, "expert weights must be the local shard"
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
+        "ecd,edf->ecf", buf, wu
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd)  # [E_loc, C, D]
+
+    # Combine: gather each assignment's expert output, weight by gate prob.
+    out_flat = out_buf.reshape(E_loc * C, D)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, D), x.dtype)], axis=0)
+    partial = jnp.zeros((T, D), x.dtype)
+    for kk in range(K):
+        gathered = out_flat[slots[kk]]  # [T, D] (zeros for non-local/dropped)
+        partial = partial + gathered * top_p[:, kk, None].astype(x.dtype)
+    return partial, aux
+
+
+def moe_apply_reference(params: dict, x: jax.Array, cfg: MoEConfig):
+    """Single-device oracle (no sharding, no drops beyond capacity)."""
+    out, aux = moe_apply_local(params, x, cfg, num_expert_shards=1, expert_shard=None)
+    return out, aux

@@ -1,0 +1,64 @@
+"""Gradient / payload compression for cross-replica traffic.
+
+Two production-honest schemes (and an honest note):
+
+  * ``bf16 collectives`` — reduce/psum gradients and lookup partials in bf16
+    instead of fp32: exactly 2x fewer ICI bytes, numerically safe for
+    gradients when the master copy stays fp32.  This is what the
+    ``comm_dtype`` knob of DisaggEmbedding and `compress_psum` implement.
+  * ``int8 + error feedback`` — per-row-scaled int8 encode/decode with a
+    residual (error-feedback) buffer.  On TPU, psum cannot accumulate in
+    int8 without overflow, so the int8 codec is used where a *gather* (not a
+    reduction) crosses the wire: cache refreshes, cross-pod parameter
+    broadcast in elastic scaling, and checkpoint streaming — 4x fewer bytes.
+
+The all-reduce-in-int8 tricks of GPU literature rely on switch/NIC-side
+reduction; ICI reductions accumulate on-chip, so sub-bf16 reduction is out of
+scope (recorded in DESIGN.md as a non-transferring assumption).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_psum(x: jax.Array, axis_name, comm_dtype=jnp.bfloat16) -> jax.Array:
+    """psum with the payload cast to `comm_dtype` (2x bytes for fp32 inputs)."""
+    return jax.lax.psum(x.astype(comm_dtype), axis_name).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Coded:
+    q: jax.Array  # int8 payload, same shape as the source
+    scale: jax.Array  # [rows] per-leading-row scales
+
+
+def int8_encode(x: jax.Array, residual: jax.Array | None = None):
+    """Per-row int8 quantization with error feedback.
+
+    Returns (coded, new_residual): `coded` carries 1/4 the bytes; the
+    quantization error accumulates in `residual` and is added back into the
+    next call, so compression bias vanishes over steps (Seide et al.).
+    """
+    if residual is not None:
+        x = x + residual
+    flat = x.reshape(x.shape[0], -1)
+    scale = jnp.max(jnp.abs(flat), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(x.shape)
+    new_residual = x - deq
+    return Int8Coded(q=q.reshape(x.shape), scale=scale), new_residual
+
+
+def int8_decode(coded: Int8Coded) -> jax.Array:
+    flat = coded.q.reshape(coded.q.shape[0], -1).astype(jnp.float32)
+    return (flat * coded.scale[:, None]).reshape(coded.q.shape)
+
+
+def compressed_bytes(x: jax.Array) -> int:
+    """Wire bytes for the int8 coding of x (payload + scales)."""
+    rows = x.shape[0]
+    return int(x.size) + rows * 4

@@ -1,0 +1,82 @@
+"""PartitionSpecs for optimizer state, derived from the parameter specs.
+
+Needed because the dry-run lowers train steps with explicitly-sharded abstract
+optimizer state: adam moments inherit the param spec; adafactor's factored
+stats drop the reduced axis; rowwise-adagrad keeps only the row axis.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _norm(spec: P, ndim: int) -> tuple:
+    t = tuple(spec)
+    return t + (None,) * (ndim - len(t))
+
+
+def adam_state_specs(pspecs: Any, pshapes: Any) -> Any:
+    return {"m": pspecs, "v": pspecs, "t": P()}
+
+
+def sgd_state_specs(pspecs: Any, pshapes: Any, momentum: float = 0.0) -> Any:
+    return pspecs if momentum else ()
+
+
+def adafactor_state_specs(pspecs: Any, pshapes: Any) -> Any:
+    def one(spec, shape):
+        nd = len(shape.shape)
+        t = _norm(spec, nd)
+        if nd >= 2:
+            return {"vr": P(*t[:-1]), "vc": P(*(t[:-2] + (t[-1],)))}
+        return {"v": P(*t)}
+
+    s = jax.tree_util.tree_map(
+        one, pspecs, pshapes, is_leaf=lambda x: isinstance(x, P)
+    )
+    return {"s": s, "t": P()}
+
+
+def rowwise_adagrad_state_specs(pspecs: Any, pshapes: Any) -> Any:
+    def one(spec, shape):
+        t = _norm(spec, len(shape.shape))
+        return P(t[0])
+
+    return jax.tree_util.tree_map(
+        one, pspecs, pshapes, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def composite_state_specs(
+    rules: list[tuple[str, str]], pspecs: Any, pshapes: Any
+) -> list:
+    """rules: [(regex, kind)] with kind in {adam, adafactor, rowwise, sgd}."""
+    fns = {
+        "adam": adam_state_specs,
+        "adafactor": adafactor_state_specs,
+        "rowwise": rowwise_adagrad_state_specs,
+        "sgd": sgd_state_specs,
+    }
+    flat_specs, _ = jax.tree_util.tree_flatten(
+        pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    flat_shapes, treedef = jax.tree_util.tree_flatten_with_path(pshapes)
+    groups: list[list[int]] = [[] for _ in rules]
+    for i, (path, _) in enumerate(flat_shapes):
+        name = jax.tree_util.keystr(path)
+        for r, (pat, _) in enumerate(rules):
+            if re.search(pat, name):
+                groups[r].append(i)
+                break
+        else:
+            raise ValueError(f"no rule for {name}")
+    out = []
+    for (pat, kind), idxs in zip(rules, groups):
+        sub_specs = [flat_specs[i] for i in idxs]
+        sub_shapes = [flat_shapes[i][1] for i in idxs]
+        out.append(fns[kind](sub_specs, sub_shapes))
+    return out

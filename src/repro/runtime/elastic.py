@@ -1,0 +1,46 @@
+"""Elastic scaling of the embedding tier (T1/T5 at fleet scale).
+
+The paper's core economic claim is that disaggregation lets the memory tier
+scale independently of compute.  This module provides the mechanism:
+re-partition the fused table across a NEW number of shards (grow/shrink the
+embedding tier) at a checkpoint boundary, preserving every logical row.
+
+With range sharding the remap is pure arithmetic: the fused array is padded
+to the new shard count and re-split; the RangeRouter derived from the new
+FusedTables is immediately consistent (routing == placement, §3.1.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.sharding import FusedTables, TableSpec, make_fused_tables
+
+
+@dataclasses.dataclass
+class ReshardResult:
+    tables: FusedTables
+    table: np.ndarray  # [new_total_rows, D]
+
+
+def reshard_tables(
+    old: FusedTables, table: np.ndarray, new_num_shards: int
+) -> ReshardResult:
+    """Re-partition to `new_num_shards` embedding servers losslessly."""
+    new = make_fused_tables(list(old.specs), table.shape[1], new_num_shards)
+    rows = np.zeros((new.total_rows, table.shape[1]), table.dtype)
+    n = min(old.raw_rows, new.raw_rows)
+    rows[:n] = table[:n]
+    return ReshardResult(tables=new, table=rows)
+
+
+def reshard_params(
+    old: FusedTables, params: dict, new_num_shards: int
+) -> tuple[FusedTables, dict]:
+    """Reshard a DisaggEmbedding params dict (and rowwise-adagrad state shapes
+    follow automatically because state is per-row)."""
+    res = reshard_tables(old, np.asarray(params["table"]), new_num_shards)
+    out = dict(params)
+    out["table"] = res.table
+    return res.tables, out

