@@ -23,11 +23,12 @@ SPMD_PROBE = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp, json
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.core.sharding import TableSpec
 from repro.core.embedding import DisaggEmbedding
 from repro.launch.hlo_analysis import analyze
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 specs = [TableSpec(f"t{i}", 100_000, nnz=8) for i in range(8)]
 out = {}
 for mode in ("baseline", "hierarchical"):

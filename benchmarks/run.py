@@ -3,16 +3,26 @@
 Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's headline
 quantity), then the full §Roofline table assembled from the dry-run artifacts.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run            # full sweep
+  PYTHONPATH=src python -m benchmarks.run --smoke    # seconds-scale subset
+
+``--smoke`` runs the fast regression subset (currently the hotcache bench in
+its shrunk configuration) so cache-path regressions show up in the bench
+trajectory without paying for the full figure sweep.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast regression subset (hotcache bench only)")
+    opts = ap.parse_args(argv)
     rows = []
 
     def bench(name, fn, derive):
@@ -26,6 +36,25 @@ def main() -> None:
             print(f"{name},-1,FAILED")
 
     print("name,us_per_call,derived")
+
+    from benchmarks import hotcache_bench
+
+    hotcache_derive = lambda o: (  # noqa: E731
+        f"bytes_reduction={o['bytes_reduction']:.2f}x "
+        f"hit_rate={o['hit_rate']:.2f} "
+        f"flat_us={o['flat_slab_us']:.0f} hash_us={o['hash_cache_us']:.0f}"
+    )
+
+    if opts.smoke:
+        bench(
+            "hotcache_smoke",
+            lambda: hotcache_bench.run(smoke=True),
+            hotcache_derive,
+        )
+        failed = [r for r in rows if r[2] == "FAILED"]
+        if failed:
+            sys.exit(1)
+        return
 
     from benchmarks import (
         fig2_embedding_dominance,
@@ -70,6 +99,7 @@ def main() -> None:
         kernel_bench.run,
         lambda o: f"attention_us={o['attention_us']:.0f}",
     )
+    bench("hotcache", hotcache_bench.run, hotcache_derive)
 
     print()
     try:

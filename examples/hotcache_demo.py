@@ -1,0 +1,71 @@
+"""Hotcache demo: the §3.1.1 temporal-locality pillar, end to end.
+
+Serves zipf-skewed traffic through the tiered lookup stack and prints what
+the cache buys: the hit rate the LFU admission policy converges to, the wire
+bytes with and without the cache, and proof that caching is *transparent*
+(results equal the single-device oracle).
+
+  PYTHONPATH=src python examples/hotcache_demo.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import DisaggEmbedding
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data import synthetic as syn
+from repro.hotcache import AdmissionPolicy, TieredLookupService
+
+
+def main():
+    rng = np.random.default_rng(0)
+    specs = (
+        TableSpec("history", 100_000, nnz=8),
+        TableSpec("item", 20_000, nnz=4),
+        TableSpec("geo", 512, nnz=1, pooling="mean"),
+    )
+    dim, shards = 32, 4
+    emb = DisaggEmbedding(specs=specs, dim=dim, num_shards=shards)
+    params = emb.init(jax.random.key(0))
+    tables = make_fused_tables(specs, dim, shards)
+    svc = HostLookupService(tables, np.asarray(params["table"]))
+    tiered = TieredLookupService(
+        svc,
+        num_slots=16_384,
+        policy=AdmissionPolicy(admission_threshold=1.5, max_swap_in=8192),
+        refresh_every=2,
+    )
+    try:
+        print("serving 30 zipf-skewed batches (B=128, alpha=1.3)...")
+        for step in range(30):
+            b = syn.recsys_batch(rng, specs, 128, alpha=1.3)
+            out = tiered.lookup(b["indices"], b["mask"])
+            if step % 10 == 9:
+                s = tiered.stats
+                print(
+                    f"  step {step + 1:3d}  hit_rate={s.hit_rate:.2f}  "
+                    f"cached={tiered.cache.occupancy}  "
+                    f"wire={s.bytes_network >> 10}KiB  "
+                    f"no-cache={s.bytes_no_cache >> 10}KiB"
+                )
+        # transparency: the tiered result equals the oracle
+        ref = emb.lookup_reference(
+            params, jnp.asarray(b["indices"]), jnp.asarray(b["mask"])
+        )
+        np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-4, atol=1e-5)
+        s = tiered.stats
+        moved = s.bytes_network + s.bytes_swap_in
+        print(f"\ncaching is transparent (allclose vs oracle) ✓")
+        print(
+            f"bytes through HostLookupService: {moved >> 10} KiB vs "
+            f"{s.bytes_no_cache >> 10} KiB without the cache "
+            f"({s.bytes_no_cache / max(1, moved):.2f}x reduction, "
+            f"{s.admitted} rows admitted over {s.batches} batches)"
+        )
+    finally:
+        svc.close()
+
+
+if __name__ == "__main__":
+    main()

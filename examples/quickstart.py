@@ -30,10 +30,9 @@ def main():
     n_dev = jax.device_count()
     mesh = None
     if n_dev >= 8:
-        mesh = jax.make_mesh(
-            (2, n_dev // 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.compat import make_mesh
+
+        mesh = make_mesh((2, n_dev // 2), ("data", "model"))
         print(f"mesh: {dict(mesh.shape)}")
     else:
         print("single device -> oracle path (set "

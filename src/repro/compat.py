@@ -1,0 +1,77 @@
+"""Version-compat shims over the jax API surface this repo depends on.
+
+The codebase is written against the modern jax spelling — ``jax.shard_map``
+with ``check_vma=``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``, ``AbstractMesh(shape, names, axis_types=...)`` — but the
+pinned toolchain ships jax 0.4.37, where none of those exist:
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+    replication check ``check_rep``;
+  * ``AxisType`` is absent (every mesh axis is implicitly Auto);
+  * ``jax.make_mesh`` takes no ``axis_types`` kwarg;
+  * ``AbstractMesh`` takes a ``tuple[(name, size), ...]`` shape tuple.
+
+Every mesh construction and every ``shard_map`` call in src/, tests/,
+benchmarks/ and examples/ routes through this module so the repo runs
+unchanged on either side of the API break.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # jax 0.4.x: all axes are Auto
+    AxisType = None  # type: ignore[assignment]
+    HAS_AXIS_TYPE = False
+
+
+def default_axis_types(num_axes: int):
+    """``axis_types=`` value for `num_axes` Auto axes, or None pre-AxisType."""
+    if HAS_AXIS_TYPE:
+        return (AxisType.Auto,) * num_axes
+    return None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types on any jax version."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            axis_shapes,
+            axis_names,
+            devices=devices,
+            axis_types=default_axis_types(len(axis_names)),
+        )
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """Device-free AbstractMesh (shape-only builds / dry runs)."""
+    from jax.sharding import AbstractMesh
+
+    if HAS_AXIS_TYPE:
+        return AbstractMesh(
+            axis_shapes, axis_names,
+            axis_types=default_axis_types(len(axis_names)),
+        )
+    return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _legacy_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )

@@ -56,11 +56,11 @@ def input_specs(arch_id: str, shape: str, mesh=None, multi_pod: bool = False):
     (weak-type-correct, shardable, no device allocation).  `mesh` defaults to
     an AbstractMesh of the production 16x16 pod."""
     if mesh is None:
-        from jax.sharding import AbstractMesh, AxisType
+        from repro.compat import abstract_mesh
 
         shape_ax = ((2, 16, 16), ("pod", "data", "model")) if multi_pod else (
             (16, 16), ("data", "model"))
-        mesh = AbstractMesh(*shape_ax, axis_types=(AxisType.Auto,) * len(shape_ax[1]))
+        mesh = abstract_mesh(*shape_ax)
     build = get(arch_id).build_cell(shape, mesh, multi_pod)
     return build.args
 

@@ -3,10 +3,19 @@
 The paper's contribution, as composable JAX modules:
   sharding        — range-based routing + row-wise table sharding (§3.1.2)
   embedding       — DisaggEmbedding: baseline / hierarchical / cached lookups
-  adaptive_cache  — load-aware cache sizing controller (§3.1.1)
+  adaptive_cache  — load-aware cache sizing controller (§3.1.1); sizes the
+                    hotcache hash table and its LFU admission threshold
   lookup_engine   — multi-threaded host engine + SPMD chunked lookups (§3.2)
   flow_control    — credit-based flow control w/ priority channel (§3.2)
   migration       — live connection migration + elastic resharding (§3.2)
+
+The device-resident hot-embedding cache itself lives in ``repro.hotcache``
+(sibling package): an open-addressing hash table in HBM (table), fused
+Pallas probe+gather+pool / scatter swap-in kernels (kernels, ref), the
+frequency-aware admission policy (policy), and the tiered miss path that
+turns cache misses into HostLookupService subrequests (miss_path).
+DisaggEmbedding.lookup accepts either cache form: the legacy sorted-slab
+HotCacheState or the hotcache HashCacheState.
 """
 from repro.core.adaptive_cache import (
     AdaptiveCacheController,
@@ -20,6 +29,7 @@ from repro.core.embedding import (
     HotCacheState,
     empty_cache,
     make_cache_from_table,
+    make_hash_cache_from_table,
 )
 from repro.core.lookup_engine import HostLookupService, chunked_lookup
 from repro.core.sharding import (
@@ -42,6 +52,7 @@ __all__ = [
     "HotCacheState",
     "empty_cache",
     "make_cache_from_table",
+    "make_hash_cache_from_table",
     "HostLookupService",
     "chunked_lookup",
     "AXIS_DATA",

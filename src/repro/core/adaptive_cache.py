@@ -110,6 +110,16 @@ class EmaFrequencyTracker:
         top = np.argpartition(self._score, -k)[-k:]
         return self._ids[top]
 
+    def top_k_with_scores(self, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, decayed scores) of the k hottest rows, hottest first."""
+        if k <= 0 or len(self._ids) == 0:
+            return np.zeros((0,), np.int64), np.zeros((0,), np.float64)
+        k = min(k, len(self._ids))
+        top = np.argpartition(self._score, -k)[-k:]
+        order = np.argsort(-self._score[top])
+        top = top[order]
+        return self._ids[top], self._score[top]
+
     def hot_fraction_covered(self, k: int) -> float:
         """Fraction of (decayed) traffic the top-k rows would absorb."""
         if len(self._ids) == 0:
@@ -124,12 +134,23 @@ class EmaFrequencyTracker:
 
 @dataclasses.dataclass
 class CachePlan:
-    """Output of the controller: what the lookup layer should replicate."""
+    """Output of the controller: what the lookup layer should replicate.
+
+    The hash-table fields size the repro.hotcache open-addressing cache: the
+    controller now resizes ``hash_slots`` (a power of two holding
+    ``capacity_rows`` at ``load_factor``) instead of a flat slab, and hands
+    the miss path an LFU ``admission_threshold`` derived from the coldest row
+    that still made the hot set."""
 
     capacity_rows: int  # row-level hot cache size (0 = disabled)
     hot_ids: np.ndarray  # fused row ids to pin (len <= capacity_rows)
     replicated_fields: tuple[int, ...]  # fields whose whole vocab is replicated
     reason: str = ""
+    hash_slots: int = 0  # open-addressing table slots (pow2; 0 = disabled)
+    hot_freqs: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64)
+    )  # LFU seeds aligned with hot_ids
+    admission_threshold: float = 1.0  # miss-path admission floor
 
 
 class AdaptiveCacheController:
@@ -146,6 +167,7 @@ class AdaptiveCacheController:
         min_rows: int = 0,
         max_rows: int = 2_000_000,
         field_replication: bool = True,
+        load_factor: float = 0.7,
     ):
         self.specs = tuple(specs)
         self.dim = dim
@@ -156,6 +178,9 @@ class AdaptiveCacheController:
         self.min_rows = min_rows
         self.max_rows = max_rows
         self.field_replication = field_replication
+        if not 0.0 < load_factor <= 1.0:
+            raise ValueError("load_factor must be in (0, 1]")
+        self.load_factor = load_factor  # hash-table fill target (probe cost)
 
     def observe(self, batch_size: int, row_ids: np.ndarray) -> None:
         self.monitor.observe(batch_size)
@@ -184,9 +209,22 @@ class AdaptiveCacheController:
         capacity = int(np.clip(rows_budget, self.min_rows, self.max_rows))
         # Round to a lane-friendly multiple; keep 0 if starved.
         capacity = (capacity // 128) * 128
-        hot = self.tracker.top_k(capacity)
+        hot, scores = self.tracker.top_k_with_scores(capacity)
+        # Hash-table sizing: hold `capacity` rows at the target load factor.
+        # (slots <= 2x capacity/load_factor since next_pow2 at most doubles;
+        # the budget accounting stays row-based because vacant slots carry no
+        # embedding payload worth mentioning: 8B/slot vs dim*4B/row.)
+        from repro.hotcache.table import next_pow2
+
+        hash_slots = next_pow2(int(np.ceil(capacity / self.load_factor))) if capacity else 0
+        # A missed row earns admission once it is as hot as the coldest row
+        # that made the cut (floor 1: everything qualifies while warming up).
+        # Floored so the plan's own hot_freqs (also floored) always clear it.
+        admission = float(np.floor(scores[-1])) if len(scores) else 1.0
+        admission = max(1.0, admission)
         reason = (
-            f"budget={budget>>20}MiB rows={capacity} rep_fields={replicated} "
+            f"budget={budget>>20}MiB rows={capacity} slots={hash_slots} "
+            f"adm={admission:.1f} rep_fields={replicated} "
             f"load={self.monitor.smoothed_batch:.0f}"
         )
         return CachePlan(
@@ -194,4 +232,7 @@ class AdaptiveCacheController:
             hot_ids=hot,
             replicated_fields=tuple(sorted(replicated)),
             reason=reason,
+            hash_slots=hash_slots,
+            hot_freqs=np.maximum(scores, 1.0).astype(np.int64),
+            admission_threshold=admission,
         )

@@ -18,10 +18,14 @@ subject:
                          ``nnz``-fold reduction in collective bytes.
 
 Adaptive caching (§3.1.1) appears in two TPU-native forms:
-  * **row-level hot cache** — a small replicated ``(ids, rows)`` side table;
-    hot hits resolve locally and are added after the cold psum.  Zero
-    interconnect bytes for hot rows on the baseline path; on the hierarchical
-    path it removes HBM gather traffic from the big shard.
+  * **row-level hot cache** — hot hits resolve locally and are added after
+    the cold psum.  Zero interconnect bytes for hot rows on the baseline
+    path; on the hierarchical path it removes HBM gather traffic from the
+    big shard.  Two cache data structures are accepted: the legacy flat
+    sorted ``(ids, rows)`` slab (binary search) and the repro.hotcache
+    ``HashCacheState`` — an open-addressing hash table with LFU
+    admission/eviction whose probe+gather+pool fuses into one Pallas kernel
+    on TPU (repro.hotcache.kernels).
   * **field-level replication** — fields whose entire vocab fits the cache
     budget are replicated outright and never enter the collective, shrinking
     the psum payload *statically* (visible in compiled HLO).  The adaptive
@@ -39,6 +43,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.hotcache.table import (
+    HashCacheState,
+    cache_insert as hc_insert,
+    cache_lookup as hc_lookup,
+    cache_partition_spec,
+)
 from repro.core.sharding import (
     AXIS_DATA,
     AXIS_MODEL,
@@ -257,7 +268,18 @@ class DisaggEmbedding:
         counts = m_g.sum(axis=2).astype(table_shard.dtype)
 
         hot = None
-        if cache is not None and cache.capacity > 0:
+        if isinstance(cache, HashCacheState):
+            if cache.num_slots > 0:
+                # hotcache fast path: open-addressing probe (repro.hotcache);
+                # on TPU the Pallas kernel fuses this probe with the pool.
+                query = jnp.where(m_g, fused, ROW_ID_PAD)
+                hot_rows, is_hot = hc_lookup(cache, query)
+                hot_rows = jnp.where(
+                    is_hot[..., None], hot_rows.astype(table_shard.dtype), 0
+                )
+                hot = hot_rows.sum(axis=2)  # [B,Fg,D] pooled hot contribution
+                m_g = m_g & ~is_hot  # cold residue -> shard path
+        elif cache is not None and cache.capacity > 0:
             pos = jnp.searchsorted(cache.ids, fused)  # [B,Fg,nnz]
             pos_c = jnp.clip(pos, 0, cache.capacity - 1)
             is_hot = (jnp.take(cache.ids, pos_c) == fused) & m_g
@@ -336,16 +358,20 @@ class DisaggEmbedding:
 
                 cache_in = cache if cache is not None else None
                 args = (params["table"], idx_g, m_g, cache_in)
+                if cache is None:
+                    cache_spec = None
+                elif isinstance(cache, HashCacheState):
+                    cache_spec = cache_partition_spec()
+                else:
+                    cache_spec = HotCacheState(ids=P(None), rows=P(None, None))
                 in_specs = (
                     P(AXIS_MODEL, None),
                     P(batch_axes, None, None),
                     P(batch_axes, None, None),
-                    None
-                    if cache is None
-                    else HotCacheState(ids=P(None), rows=P(None, None)),
+                    cache_spec,
                 )
                 chunk_outs.append(
-                    jax.shard_map(
+                    shard_map(
                         sharded_fn,
                         mesh=mesh,
                         in_specs=in_specs,
@@ -428,7 +454,7 @@ class DisaggEmbedding:
                 partial.astype(jnp.float32), counts, self.sharded_idx
             )
 
-        return jax.shard_map(
+        return shard_map(
             fn,
             mesh=mesh,
             in_specs=(
@@ -469,7 +495,7 @@ class DisaggEmbedding:
             rows = self._gather_masked(table_shard, local, hit)
             return jax.lax.psum(rows, AXIS_MODEL)
 
-        return jax.shard_map(
+        return shard_map(
             fn,
             mesh=mesh,
             in_specs=(
@@ -512,13 +538,49 @@ class DisaggEmbedding:
             rows = jnp.where(hit[:, None], rows, 0)
             return jax.lax.psum(rows, AXIS_MODEL)
 
-        return jax.shard_map(
+        return shard_map(
             fn,
             mesh=mesh,
             in_specs=(P(AXIS_MODEL, None), P(None)),
             out_specs=P(None, None),
             check_vma=False,
         )(params["table"], row_ids)
+
+
+def make_hash_cache_from_table(
+    emb: DisaggEmbedding,
+    params: dict,
+    hot_ids: np.ndarray,
+    num_slots: int,
+    freqs: np.ndarray | None = None,
+    admission_threshold: int = 1,
+    mesh: Mesh | None = None,
+    max_probes: int = 8,
+) -> HashCacheState:
+    """Materialize a hotcache HashCacheState holding `hot_ids` (fused ids).
+
+    Rows come from the authoritative sharded table (gather_rows), so cached
+    lookups stay bit-identical to uncached ones.  `freqs` seeds the LFU
+    counters (defaults to rank order: hottest id gets the largest counter, so
+    window conflicts resolve the right way)."""
+    from repro.hotcache.table import empty_hash_cache
+
+    hot_ids = np.asarray(hot_ids)[: num_slots]
+    if freqs is None:
+        freqs = np.arange(len(hot_ids), 0, -1, dtype=np.int32)
+    state = empty_hash_cache(num_slots, emb.dim, emb.param_dtype)
+    if len(hot_ids) == 0:
+        return state
+    ids_j = jnp.asarray(hot_ids.astype(np.int32))
+    rows = emb.gather_rows(
+        params, jnp.clip(ids_j, 0, emb.sharded.total_rows - 1), mesh
+    )
+    rows = jnp.where((ids_j < emb.sharded.total_rows)[:, None], rows, 0)
+    state, _ = hc_insert(
+        state, ids_j, rows, jnp.asarray(freqs, jnp.int32),
+        admission_threshold, max_probes=max_probes,
+    )
+    return state
 
 
 def make_cache_from_table(

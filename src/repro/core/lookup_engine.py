@@ -92,7 +92,7 @@ class RdmaEngine(threading.Thread):
         self.engine_id = engine_id
         self.connections: list[Connection] = []
         self._wake = threading.Event()
-        self._stop = False
+        self._stop_flag = False
         self._lock = threading.Lock()  # guards self.connections (migration)
 
     def attach(self, conn: Connection) -> None:
@@ -110,7 +110,7 @@ class RdmaEngine(threading.Thread):
         self._wake.set()
 
     def run(self) -> None:
-        while not self._stop:
+        while not self._stop_flag:
             worked = False
             with self._lock:
                 conns = list(self.connections)
@@ -135,7 +135,7 @@ class RdmaEngine(threading.Thread):
                 self._wake.clear()
 
     def stop(self) -> None:
-        self._stop = True
+        self._stop_flag = True
         self._wake.set()
 
 
@@ -197,9 +197,17 @@ class HostLookupService:
             e.join(timeout=1.0)
 
     def lookup(
-        self, indices: np.ndarray, mask: np.ndarray
+        self,
+        indices: np.ndarray,
+        mask: np.ndarray,
+        mean_normalize: bool = True,
     ) -> np.ndarray:
-        """[B,F,nnz] -> [B,F,D] pooled. Fans subrequests out per server."""
+        """[B,F,nnz] -> [B,F,D] pooled. Fans subrequests out per server.
+
+        mean_normalize=False returns raw per-bag SUMS: callers that merge
+        this with another tier (the hotcache miss path) must normalize mean
+        fields once at the end, over the full validity counts.
+        """
         B, F, NNZ = indices.shape
         offs = self.tables.field_offsets_array()
         fused = (indices.astype(np.int64) + offs[None, :, None]).ravel()
@@ -249,10 +257,25 @@ class HostLookupService:
                 np.add.at(out, bags, rows)
         # Mean-pool fields divide by their valid counts.
         out = out.reshape(B, F, D)
+        if not mean_normalize:
+            return out
         counts = mask.sum(-1).astype(np.float32)
         mean_mask = np.asarray([s.pooling == "mean" for s in self.tables.specs])
         denom = np.maximum(counts, 1.0)[..., None]
         return np.where(mean_mask[None, :, None], out / denom, out)
+
+    def gather_rows(self, row_ids: np.ndarray) -> np.ndarray:
+        """Raw rows by fused id — the hotcache swap-in fetch (off the serving
+        hot path, so it reads the shards directly rather than via engines)."""
+        row_ids = np.asarray(row_ids, np.int64)
+        D = self.servers[0].rows.shape[1]
+        out = np.zeros((len(row_ids), D), self.servers[0].rows.dtype)
+        shard = self.router.shard_of(row_ids)
+        for s in range(self.tables.num_shards):
+            sel = shard == s
+            if sel.any():
+                out[sel] = self.servers[s].lookup_rows(row_ids[sel])
+        return out
 
     def network_bytes(self, indices: np.ndarray, mask: np.ndarray) -> int:
         """Response bytes on the wire (the paper's Fig-4 quantity).

@@ -1,0 +1,260 @@
+"""Tiered miss path: cache-first lookup with misses batched to the servers.
+
+``HostHashCache`` is the host-side mirror of table.HashCacheState — same
+open-addressing layout, same hash/probe geometry (table.hash_slots_np), in
+numpy — the form the serving runtime (which lives outside jit) consumes.
+
+``TieredLookupService`` stacks it in front of a core.lookup_engine
+.HostLookupService:
+
+  tier 0  hash-cache probe       — hits resolve locally, zero network bytes
+  tier 1  miss subrequests       — ONLY cache misses are fanned out to the
+                                   embedding servers (the paper's "shrink the
+                                   lookup" §3.1.1: bytes scale with the miss
+                                   rate, not the request rate)
+  refresh LFU swap-in            — decayed miss counters admit rows past the
+                                   admission threshold (policy.py); swap-in
+                                   fetch bytes are tracked separately
+
+Mean-pooled fields are normalized once at the end over the FULL validity
+counts, so splitting a bag between cache hits and server misses is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.adaptive_cache import EmaFrequencyTracker
+from repro.hotcache.policy import AdmissionPolicy, select_admissions
+
+if TYPE_CHECKING:  # annotation-only: a runtime import would close the cycle
+    from repro.core.lookup_engine import HostLookupService  # noqa: F401
+    # core.embedding -> hotcache -> miss_path -> lookup_engine -> core.embedding
+from repro.hotcache.table import EMPTY_KEY, hash_slots_np, next_pow2
+
+
+class HostHashCache:
+    """Open-addressing (linear probe) cache of embedding rows, in host memory."""
+
+    def __init__(self, num_slots: int, dim: int, max_probes: int = 8):
+        num_slots = next_pow2(num_slots) if num_slots else 0
+        self.num_slots = num_slots
+        self.max_probes = max_probes
+        self.keys = np.full((num_slots,), EMPTY_KEY, np.int64)
+        self.rows = np.zeros((num_slots, dim), np.float32)
+        self.freq = np.zeros((num_slots,), np.float64)
+
+    # ------------------------------------------------------------------ read
+
+    def probe(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """ids [...] -> (slot [...], hit [...]). Vectorized, read-only."""
+        if self.num_slots == 0:
+            z = np.zeros(np.shape(ids), np.int64)
+            return z, np.zeros(np.shape(ids), bool)
+        home = hash_slots_np(ids, self.num_slots)
+        offs = np.arange(self.max_probes)
+        slots = (home[..., None] + offs) & (self.num_slots - 1)
+        match = (self.keys[slots] == np.asarray(ids)[..., None]) & (
+            np.asarray(ids) != EMPTY_KEY
+        )[..., None]
+        hit = match.any(axis=-1)
+        sel = np.argmax(match, axis=-1)
+        slot = np.take_along_axis(slots, sel[..., None], axis=-1)[..., 0]
+        return slot, hit
+
+    def lookup(
+        self, ids: np.ndarray, credit: bool = False
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """ids [...] -> (rows [..., D], hit [...]); miss rows are zero.
+
+        credit=True bumps the hit slots' LFU counters, so resident-hot rows
+        keep defending their slots against decay + challengers (without it,
+        only the *miss* path feeds frequencies and a 100%-hit row would decay
+        to an easy eviction victim).  The device HashCacheState lookup stays
+        a pure read; crediting is a host-mirror privilege."""
+        if self.num_slots == 0:
+            return (
+                np.zeros(np.shape(ids) + (self.rows.shape[1],), np.float32),
+                np.zeros(np.shape(ids), bool),
+            )
+        slot, hit = self.probe(ids)
+        rows = self.rows[slot] * hit[..., None]
+        if credit and hit.any():
+            np.add.at(self.freq, slot[hit], 1.0)
+        return rows, hit
+
+    @property
+    def occupancy(self) -> int:
+        return int((self.keys != EMPTY_KEY).sum())
+
+    # ----------------------------------------------------------------- write
+
+    def insert(
+        self, ids: np.ndarray, rows: np.ndarray, freqs: np.ndarray,
+        admission_threshold: float = 1.0,
+    ) -> int:
+        """Batch insert under the table.cache_insert rules; returns #admitted."""
+        if self.num_slots == 0:
+            return 0
+        admitted = 0
+        home = hash_slots_np(ids, self.num_slots)
+        for i in range(len(ids)):
+            id_i = int(ids[i])
+            if id_i == EMPTY_KEY:
+                continue
+            window = (home[i] + np.arange(self.max_probes)) & (self.num_slots - 1)
+            kw = self.keys[window]
+            match = np.flatnonzero(kw == id_i)
+            if len(match):
+                t = window[match[0]]
+                self.rows[t] = rows[i]
+                self.freq[t] += freqs[i]
+                admitted += 1
+                continue
+            if freqs[i] < admission_threshold:
+                continue
+            vacant = np.flatnonzero(kw == EMPTY_KEY)
+            if len(vacant):
+                t = window[vacant[0]]
+            else:
+                t = window[np.argmin(self.freq[window])]
+                if freqs[i] <= self.freq[t]:
+                    continue  # incumbent is at least as hot: keep it
+            self.keys[t] = id_i
+            self.rows[t] = rows[i]
+            self.freq[t] = freqs[i]
+            admitted += 1
+        return admitted
+
+    def decay(self, factor: float) -> None:
+        self.freq *= factor
+
+
+@dataclasses.dataclass
+class TieredStats:
+    lookups: int = 0  # valid (id, slot) pairs probed
+    hits: int = 0
+    batches: int = 0
+    bytes_no_cache: int = 0  # what the wire would carry without the cache
+    bytes_network: int = 0  # what it actually carried (misses only)
+    bytes_swap_in: int = 0  # refresh-path fetches
+    admitted: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.lookups)
+
+    @property
+    def bytes_saved(self) -> int:
+        return self.bytes_no_cache - self.bytes_network - self.bytes_swap_in
+
+    def summary(self) -> dict:
+        return {
+            "hit_rate": self.hit_rate,
+            "bytes_no_cache": self.bytes_no_cache,
+            "bytes_network": self.bytes_network,
+            "bytes_swap_in": self.bytes_swap_in,
+            "bytes_saved": self.bytes_saved,
+            "admitted": self.admitted,
+        }
+
+
+class TieredLookupService:
+    """Hash-cache tier in front of a HostLookupService (see module docstring).
+
+    ``remote_fn(indices, cold_mask) -> [B, F, D] unnormalized sums`` may be
+    injected (the serving runtime passes its hedged lookup); the default goes
+    straight to ``service.lookup(..., mean_normalize=False)``.
+
+    ``refresh_every=0`` disables the self-driven LFU refresh: an external
+    controller (runtime.serving + core.adaptive_cache) owns the swap-in
+    schedule instead.  ``track_bytes=False`` skips the per-batch wire-byte
+    accounting (an O(batch) np.unique per call) for latency-critical callers
+    that don't consume the stats.
+    """
+
+    def __init__(
+        self,
+        service: "HostLookupService",
+        num_slots: int,
+        policy: AdmissionPolicy | None = None,
+        max_probes: int = 8,
+        refresh_every: int = 8,
+        remote_fn=None,
+        track_bytes: bool = True,
+    ):
+        self.service = service
+        dim = service.servers[0].rows.shape[1]
+        self.cache = HostHashCache(num_slots, dim, max_probes=max_probes)
+        self.policy = policy or AdmissionPolicy()
+        self.refresh_every = refresh_every
+        self.track_bytes = track_bytes
+        self.remote_fn = remote_fn or (
+            lambda idx, cold: service.lookup(idx, cold, mean_normalize=False)
+        )
+        self.tracker = EmaFrequencyTracker(decay=self.policy.decay)
+        self.stats = TieredStats()
+        self._offsets = service.tables.field_offsets_array()
+
+    # ---------------------------------------------------------------- lookup
+
+    def lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """[B,F,nnz] -> [B,F,D] pooled; only cache misses hit the network."""
+        mask = np.asarray(mask, bool)
+        fused = indices.astype(np.int64) + self._offsets[None, :, None]
+        self.stats.batches += 1
+        self.stats.lookups += int(mask.sum())
+        if self.track_bytes:
+            self.stats.bytes_no_cache += self.service.network_bytes(indices, mask)
+
+        rows, hit = self.cache.lookup(np.where(mask, fused, EMPTY_KEY), credit=True)
+        hit &= mask
+        self.stats.hits += int(hit.sum())
+        out = (rows * hit[..., None]).sum(axis=2, dtype=np.float32)
+
+        cold = mask & ~hit
+        if cold.any():
+            if self.track_bytes:
+                self.stats.bytes_network += self.service.network_bytes(
+                    indices, cold
+                )
+            out += np.asarray(self.remote_fn(indices, cold), np.float32)
+            self.tracker.update(fused[cold])
+
+        out = self._mean_normalize(out, mask)
+        if self.refresh_every and self.stats.batches % self.refresh_every == 0:
+            self.refresh()
+        return out
+
+    def _mean_normalize(self, sums: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        counts = mask.sum(-1).astype(np.float32)
+        mean_mask = np.asarray(
+            [s.pooling == "mean" for s in self.service.tables.specs]
+        )
+        denom = np.maximum(counts, 1.0)[..., None]
+        return np.where(mean_mask[None, :, None], sums / denom, sums)
+
+    # --------------------------------------------------------------- refresh
+
+    def refresh(self) -> int:
+        """LFU swap-in: admit miss ids that cleared the admission threshold."""
+        if self.cache.num_slots == 0:
+            return 0
+        cand_ids, scores = self.tracker.top_k_with_scores(
+            self.policy.max_swap_in * 4
+        )
+        if len(cand_ids) == 0:
+            return 0
+        ids, freqs = select_admissions(cand_ids, scores, self.policy, self.cache.keys)
+        if not len(ids):
+            self.cache.decay(self.policy.decay)
+            return 0
+        rows = self.service.gather_rows(ids)
+        entry = 4 + rows.shape[1] * rows.dtype.itemsize
+        self.stats.bytes_swap_in += len(ids) * entry
+        n = self.cache.insert(ids, rows, freqs, self.policy.admission_threshold)
+        self.stats.admitted += n
+        self.cache.decay(self.policy.decay)
+        return n

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the hotcache Pallas kernels (the allclose targets).
+
+Semantics are defined here once; repro.hotcache.kernels must match these
+bit-for-bit on the integer outputs and to fp32 tolerance on the pooled rows.
+Both sides share the hash/probe geometry from repro.hotcache.table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.hotcache.table import EMPTY_KEY, probe_slots
+
+
+def probe_gather_pool_ref(
+    keys: jax.Array,  # [C] int32
+    values: jax.Array,  # [C, D]
+    ids: jax.Array,  # [N] int32 fused row ids (EMPTY_KEY = inactive slot)
+    weights: jax.Array,  # [N] f32 (0.0 masks; 1/count for mean pooling)
+    num_bags: int,
+    max_probes: int,
+) -> tuple[jax.Array, jax.Array]:
+    """(pooled [num_bags, D] f32, miss [N] bool).
+
+    miss[i] is True whenever ids[i] is not found — including inactive
+    (EMPTY_KEY) slots; callers mask with their validity mask.
+    """
+    C = keys.shape[0]
+    slots = probe_slots(ids, C, max_probes)  # [N, P]
+    kw = jnp.take(keys, slots)  # [N, P]
+    match = (kw == ids[:, None]) & (ids != EMPTY_KEY)[:, None]
+    found = match.any(axis=1)
+    sel = jnp.argmax(match, axis=1)
+    slot = jnp.take_along_axis(slots, sel[:, None], axis=1)[:, 0]
+    rows = jnp.take(values, slot, axis=0).astype(jnp.float32)
+    rows = rows * (found.astype(jnp.float32) * weights)[:, None]
+    nnz = ids.shape[0] // num_bags
+    pooled = rows.reshape(num_bags, nnz, -1).sum(axis=1)
+    return pooled, ~found
+
+
+def scatter_update_ref(
+    values: jax.Array,  # [C, D]
+    slots: jax.Array,  # [K] int32 target slots
+    rows: jax.Array,  # [K, D] replacement rows
+) -> jax.Array:
+    """Swap-in oracle: values with rows written at slots (last write wins)."""
+    return values.at[slots].set(rows.astype(values.dtype))

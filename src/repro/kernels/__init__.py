@@ -9,7 +9,13 @@
 
 Each <name>.py holds the pl.pallas_call + BlockSpecs, ops.py the jit'd
 wrappers, ref.py the pure-jnp oracles the tests sweep against.
+
+The hot-embedding-cache kernels (fused hash-probe + gather + pool + miss
+mask, and the scatter swap-in) live with their data structure in
+repro.hotcache.kernels; they are re-exported here so the kernel surface
+stays one import.
 """
+from repro.hotcache.kernels import probe_gather_pool, scatter_update
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.ops import (
     bag_lookup,
@@ -24,4 +30,6 @@ __all__ = [
     "embedding_bag",
     "flash_attention",
     "flash_decode",
+    "probe_gather_pool",
+    "scatter_update",
 ]

@@ -6,9 +6,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
+from repro.compat import make_mesh
 from repro.core.sharding import AXIS_DATA, AXIS_MODEL, AXIS_POD
 
 
@@ -16,20 +14,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = (AXIS_POD, AXIS_DATA, AXIS_MODEL) if multi_pod else (AXIS_DATA, AXIS_MODEL)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 4, pod: int | None = None):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model),
-            (AXIS_POD, AXIS_DATA, AXIS_MODEL),
-            axis_types=(AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), (AXIS_DATA, AXIS_MODEL), axis_types=(AxisType.Auto,) * 2
-    )
+        return make_mesh((pod, data, model), (AXIS_POD, AXIS_DATA, AXIS_MODEL))
+    return make_mesh((data, model), (AXIS_DATA, AXIS_MODEL))
 
 
 def batch_axes_for(mesh) -> tuple[str, ...]:

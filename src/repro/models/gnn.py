@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.sharding import AXIS_DATA, AXIS_MODEL
 from repro.models import layers as L
 
@@ -111,7 +112,7 @@ def forward_full_graph(
         sums, counts = _aggregate_dense(h_rep, e_l[:, 0], e_l[:, 1], m_l, N)
         return jax.lax.psum(sums, all_axes), jax.lax.psum(counts, all_axes)
 
-    agg_sharded = jax.shard_map(
+    agg_sharded = shard_map(
         agg,
         mesh=mesh,
         in_specs=(P(None, None), P(all_axes, None), P(all_axes)),
@@ -165,7 +166,7 @@ def forward_full_graph_partitioned(
     h = feats.astype(dt)
     for li, lp in enumerate(params["layers"]):
         fn = lambda h_l, e_l, m_l, lp=lp: step(h_l, e_l, m_l, lp)
-        h = jax.shard_map(
+        h = shard_map(
             fn,
             mesh=mesh,
             in_specs=(P(all_axes, None), P(all_axes, None), P(all_axes)),

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.sharding import AXIS_DATA, AXIS_MODEL, AXIS_POD
 
 # --------------------------------------------------------------------- utils
@@ -264,7 +265,7 @@ def sharded_vocab_embed(
         emb = jnp.where(hit[..., None], emb.astype(out_dtype), 0)
         return jax.lax.psum(emb, AXIS_MODEL)
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(AXIS_MODEL, None), P(batch_axes, None)),

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.embedding import DisaggEmbedding, HotCacheState
 from repro.core.sharding import AXIS_DATA, AXIS_MODEL, AXIS_POD, TableSpec
 from repro.models import layers as L
@@ -532,7 +533,7 @@ def mind_retrieval(
         gval, gidx = jax.lax.top_k(vals, k)
         return gval, jnp.take_along_axis(poss, gidx, axis=1)
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(None, batch_axes),),
@@ -587,7 +588,7 @@ def retrieval_topk(
         gval, gidx = jax.lax.top_k(vals, k)
         return gval, jnp.take_along_axis(poss, gidx, axis=1)
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(None, None), P(all_axes, None)),

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.sharding import AXIS_DATA, AXIS_MODEL, AXIS_POD
 from repro.models import layers as L
 from repro.models.moe import MoEConfig, moe_apply_local, moe_init
@@ -270,7 +271,7 @@ def _moe_forward(cfg, mesh, batch_axes, h, lp):
             aux = jax.lax.pmean(aux, batch_axes)
         return out.reshape(Bl, Sl, D), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         fn,
         mesh=mesh,
         in_specs=(
@@ -516,7 +517,7 @@ def decode_step(
         else:
             b = batch_axes if batch_axes else None
             kv_spec = P(b, seq_axes if seq_axes else None, None, None)
-            attn, k_c, v_c = jax.shard_map(
+            attn, k_c, v_c = shard_map(
                 attn_shardmap,
                 mesh=mesh,
                 in_specs=(

@@ -27,6 +27,7 @@ from repro.core.adaptive_cache import AdaptiveCacheController
 from repro.core.lookup_engine import HostLookupService
 from repro.core.sharding import FusedTables
 from repro.data.pipeline import BucketBatcher
+from repro.hotcache.miss_path import HostHashCache, TieredLookupService
 from repro.models import recsys as R
 from repro.utils import logger
 
@@ -40,7 +41,14 @@ class ServeMetrics:
     hedges: int = 0
     lookup_seconds: float = 0.0
     dense_seconds: float = 0.0
+    bytes_no_cache: int = 0  # wire bytes a cache-less deployment would move
+    bytes_network: int = 0  # wire bytes actually moved (misses only)
+    bytes_swap_in: int = 0  # hotcache refresh fetches
     latencies: list = dataclasses.field(default_factory=list)
+
+    @property
+    def bytes_saved(self) -> int:
+        return self.bytes_no_cache - self.bytes_network - self.bytes_swap_in
 
     def summary(self) -> dict:
         lat = sorted(self.latencies) or [0.0]
@@ -53,6 +61,11 @@ class ServeMetrics:
             "p99_latency_ms": 1e3 * lat[int(0.99 * (len(lat) - 1))],
             "lookup_seconds": self.lookup_seconds,
             "dense_seconds": self.dense_seconds,
+            "network_bytes": self.bytes_network,
+            "bytes_no_cache": self.bytes_no_cache,
+            "bytes_swap_in": self.bytes_swap_in,
+            "bytes_saved": self.bytes_saved,
+            "bytes_saved_frac": self.bytes_saved / max(1, self.bytes_no_cache),
         }
 
 
@@ -83,8 +96,17 @@ class FlexEMRServer:
         self.cache_refresh_every = cache_refresh_every
         self.batcher = BucketBatcher()
         self.metrics = ServeMetrics()
-        self._cache_ids = np.zeros((0,), np.int64)  # sorted hot fused rows
-        self._cache_rows = np.zeros((0, cfg.embed_dim), np.float32)
+        # repro.hotcache tiered front end over the lookup service.  The hash
+        # cache starts empty (0 slots) until the controller's first plan;
+        # refresh_every=0: the controller owns the swap-in schedule, not the
+        # tier's own LFU loop.  The hedged remote keeps straggler mitigation.
+        self._tiered = TieredLookupService(
+            self.service,
+            num_slots=0,
+            refresh_every=0,
+            remote_fn=self._hedged_remote,
+        )
+        self._plan_swap_in_bytes = 0
         self._dense = jax.jit(self._dense_fn)
         self._offsets = tables.field_offsets_array()
 
@@ -110,43 +132,45 @@ class FlexEMRServer:
 
     # ---------------------------------------------------------------- lookup
 
+    def _hedged_remote(self, indices: np.ndarray, cold_mask: np.ndarray):
+        """Miss-tier executor with straggler hedging: returns [B,F,D] SUMS."""
+        t0 = time.perf_counter()
+        done = threading.Event()
+        result: list = [None]
+
+        def work():
+            result[0] = self.service.lookup(
+                indices, cold_mask, mean_normalize=False
+            )
+            done.set()
+
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        if not done.wait(self.hedge_timeout):
+            # straggler: hedge by executing ranker-side from the
+            # authoritative table copy (zero-trust of the slow path)
+            self.metrics.hedges += 1
+            fused = indices.astype(np.int64) + self._offsets[None, :, None]
+            fused_c = np.where(cold_mask, fused, 0)
+            rows = self.table_np[fused_c] * cold_mask[..., None]
+            out = rows.sum(axis=2).astype(np.float32)
+            done.wait()  # drain the engine result; discard
+        else:
+            out = result[0].astype(np.float32)
+        self.metrics.lookup_seconds += time.perf_counter() - t0
+        return out
+
     def _lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
-        """Cache fast path + remote lookup + ranker-side hedge."""
-        B, F, NNZ = indices.shape
-        fused = indices.astype(np.int64) + self._offsets[None, :, None]
-        out = np.zeros((B, F, self.cfg.embed_dim), np.float32)
-        cold_mask = mask.copy()
-        self.metrics.lookups += int(mask.sum())
-        if len(self._cache_ids):
-            pos = np.searchsorted(self._cache_ids, fused)
-            pos_c = np.clip(pos, 0, len(self._cache_ids) - 1)
-            hot = (self._cache_ids[pos_c] == fused) & mask
-            self.metrics.cache_hits += int(hot.sum())
-            rows = self._cache_rows[pos_c] * hot[..., None]
-            out += rows.sum(axis=2)
-            cold_mask = mask & ~hot
-        if cold_mask.any():
-            t0 = time.perf_counter()
-            done = threading.Event()
-            result: list = [None]
-
-            def work():
-                result[0] = self.service.lookup(indices, cold_mask)
-                done.set()
-
-            t = threading.Thread(target=work, daemon=True)
-            t.start()
-            if not done.wait(self.hedge_timeout):
-                # straggler: hedge by executing ranker-side from the
-                # authoritative table copy (zero-trust of the slow path)
-                self.metrics.hedges += 1
-                fused_c = np.where(cold_mask, fused, 0)
-                rows = self.table_np[fused_c] * cold_mask[..., None]
-                out += rows.sum(axis=2).astype(np.float32)
-                done.wait()  # drain the engine result; discard
-            else:
-                out += result[0].astype(np.float32)
-            self.metrics.lookup_seconds += time.perf_counter() - t0
+        """Tiered lookup: hotcache probe, miss subrequests, ranker-side hedge
+        (all inside TieredLookupService, with _hedged_remote as the miss
+        tier).  Mean fields are normalized once over the full counts."""
+        out = self._tiered.lookup(indices, mask)
+        s = self._tiered.stats
+        self.metrics.lookups = s.lookups
+        self.metrics.cache_hits = s.hits
+        self.metrics.bytes_no_cache = s.bytes_no_cache
+        self.metrics.bytes_network = s.bytes_network
+        self.metrics.bytes_swap_in = s.bytes_swap_in + self._plan_swap_in_bytes
         return out
 
     # --------------------------------------------------------------- serving
@@ -191,12 +215,32 @@ class FlexEMRServer:
 
     def _apply_cache_plan(self, current_batch: int) -> None:
         plan = self.controller.plan(current_batch)
-        k = min(plan.capacity_rows, len(plan.hot_ids))
-        ids = np.sort(plan.hot_ids[:k]) if k else np.zeros((0,), np.int64)
-        self._cache_ids = ids
-        self._cache_rows = self.table_np[ids] if k else np.zeros(
-            (0, self.cfg.embed_dim), np.float32
+        cache = self._tiered.cache
+        if cache.num_slots != plan.hash_slots:
+            # Resize = rebuild: the probe geometry depends on num_slots.
+            cache = self._tiered.cache = HostHashCache(
+                plan.hash_slots, self.cfg.embed_dim
+            )
+        self._tiered.policy = dataclasses.replace(
+            self._tiered.policy,
+            admission_threshold=plan.admission_threshold,
         )
+        k = min(plan.capacity_rows, len(plan.hot_ids))
+        if k and plan.hash_slots:
+            ids = plan.hot_ids[:k]
+            freqs = (
+                plan.hot_freqs[:k]
+                if len(plan.hot_freqs) >= k
+                else np.ones((k,), np.int64)
+            )
+            rows = self.table_np[ids]  # swap-in fetch (RDMA on real hardware)
+            # Only rows not already resident cost wire bytes to fetch.
+            _, already = cache.probe(ids)
+            entry = 4 + rows.shape[1] * rows.dtype.itemsize
+            self._plan_swap_in_bytes += int((~already).sum()) * entry
+            # The planned rows ARE the chosen hot set: threshold 1 (always
+            # admit); plan.admission_threshold gates runtime misses instead.
+            cache.insert(ids, rows, freqs, 1.0)
         logger.info("cache plan applied: %s", plan.reason)
 
     def close(self):

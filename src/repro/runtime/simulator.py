@@ -47,6 +47,12 @@ class SimConfig:
     skew_alpha: float = 0.0  # >0: zipf-skewed server popularity
     seed: int = 0
     migrate_every: float = 200e-6
+    # repro.hotcache tier in front of the wire: a hit-rate-h cache strips h of
+    # every subrequest's rows (response bytes scale with the MISS rate), and a
+    # subrequest whose rows ALL hit is never posted at all (no engine/unit
+    # occupancy, no server visit) — that happens w.p. h^rows_per_subrequest.
+    cache_hit_rate: float = 0.0
+    rows_per_subrequest: int = 32
 
 
 class LookupSimulator:
@@ -94,7 +100,15 @@ class LookupSimulator:
             active = self.rng.choice(
                 cfg.n_servers, size=fanout, replace=True, p=self.server_weight
             )
-            done_t = t_start
+            if cfg.cache_hit_rate > 0.0:
+                # Fully-hit subrequests never leave the ranker.
+                p_all_hit = cfg.cache_hit_rate ** cfg.rows_per_subrequest
+                active = active[self.rng.random(len(active)) >= p_all_hit]
+            sub_bytes = cfg.bytes_per_subrequest * (1.0 - cfg.cache_hit_rate)
+            # Even a fully-cached batch pays the ranker-local probe: floor
+            # the completion at one t_post so hit_rate=1.0 yields a finite
+            # (local-work-bound) throughput instead of a zero makespan.
+            done_t = t_start + cfg.t_post
             for s in active:
                 e = self.conn_engine[s]
                 u = self.conn_unit[s]
@@ -111,7 +125,7 @@ class LookupSimulator:
                 resp = (
                     t_done_post
                     + cfg.t_server
-                    + cfg.bytes_per_subrequest / cfg.wire_bps
+                    + sub_bytes / cfg.wire_bps
                 )
                 done_t = max(done_t, resp)
             return done_t
@@ -178,6 +192,25 @@ def compare_engines(**overrides) -> dict:
     out["speedup"] = (
         out["flexemr"]["throughput_batches_per_s"]
         / out["naive"]["throughput_batches_per_s"]
+    )
+    return out
+
+
+def compare_hit_rates(
+    hit_rates=(0.0, 0.25, 0.5, 0.75, 0.9), **overrides
+) -> dict:
+    """Hotcache sweep: throughput vs cache hit rate (Fig-7/8-style axis).
+
+    Byte-heavy regimes (pooling disabled / large dim) shift the bottleneck to
+    the wire, which is exactly where the hit-rate term bites."""
+    rates = sorted(float(h) for h in hit_rates)
+    out = {}
+    for h in rates:
+        cfg = SimConfig(cache_hit_rate=h, **overrides)
+        out[h] = LookupSimulator(cfg).run()
+    out["speedup_at_max_hit"] = (
+        out[rates[-1]]["throughput_batches_per_s"]
+        / out[rates[0]]["throughput_batches_per_s"]
     )
     return out
 

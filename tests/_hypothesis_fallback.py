@@ -1,0 +1,100 @@
+"""Minimal, API-compatible stand-in for `hypothesis`, used ONLY when the real
+package is absent (this container cannot pip-install it).
+
+Covers exactly the surface the test suite uses:
+
+  * ``@given(name=strategy, ...)`` — draws ``max_examples`` deterministic
+    (seeded) examples per strategy and calls the test once per example.
+  * ``@settings(max_examples=N, deadline=None)`` — records ``max_examples``
+    on the wrapped function (deadline is ignored).
+  * ``strategies.integers(lo, hi)`` / ``strategies.sampled_from(seq)``.
+
+Draws are seeded per (test-name, example-index), so failures reproduce.  The
+real hypothesis is strictly better (shrinking, coverage-guided generation);
+`tests/conftest.py` installs this module into ``sys.modules`` only on
+``ImportError``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-fallback"
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_at(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value))
+        )
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        n = getattr(fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            base_seed = zlib.adler32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((base_seed, i))
+                drawn = {k: s.example_at(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 - reraise with repro info
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}, "
+                        f"example {i}): {drawn!r}"
+                    ) from e
+
+        # pytest resolves fixtures from the signature: hide the drawn
+        # parameters so only real fixtures (e.g. `rng`) remain visible.
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__
+
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:  # accessed by some suites; values are inert here
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"

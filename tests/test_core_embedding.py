@@ -122,10 +122,9 @@ def test_chunked_lookup_matches(trivial_mesh, rng):
 def test_hot_cache_is_transparent(cache_size, seed):
     """Property: any hot set leaves lookup results unchanged."""
     import jax as _jax
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
 
-    mesh = _jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     specs = _specs()
     rng = np.random.default_rng(seed)
     idx, msk = _batch(rng, specs)

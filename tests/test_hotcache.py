@@ -1,0 +1,269 @@
+"""repro.hotcache: hash table vs dict oracle, Pallas kernels vs ref oracles,
+and the tiered miss path end-to-end on zipf-skewed traffic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.embedding import DisaggEmbedding, make_hash_cache_from_table
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data import synthetic as syn
+from repro.hotcache import ref as HREF
+from repro.hotcache.kernels import probe_gather_pool, scatter_update
+from repro.hotcache.miss_path import HostHashCache, TieredLookupService
+from repro.hotcache.policy import AdmissionPolicy
+from repro.hotcache.table import (
+    EMPTY_KEY,
+    cache_insert,
+    cache_lookup,
+    empty_hash_cache,
+    hash_slots,
+    hash_slots_np,
+    next_pow2,
+)
+
+
+# ------------------------------------------------------------- hash geometry
+
+
+def test_hash_slots_np_matches_jnp():
+    ids = np.concatenate(
+        [np.arange(1000), np.array([EMPTY_KEY, 2**31 - 2, 0])]
+    ).astype(np.int32)
+    for C in (16, 256, 4096):
+        got_np = hash_slots_np(ids, C)
+        got_j = np.asarray(hash_slots(jnp.asarray(ids), C))
+        np.testing.assert_array_equal(got_np, got_j)
+
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (0, 1, 2, 3, 640, 1024)] == [
+        1, 1, 2, 4, 1024, 1024,
+    ]
+
+
+# -------------------------------------------------- insert/probe/evict oracle
+
+
+def _dict_oracle_insert(table: dict, id_i, row_i, f_i, C, P, thr):
+    """Independent python simulation of the table.cache_insert rules.
+
+    `table` maps slot -> [key, row, freq].
+    """
+    if id_i == EMPTY_KEY:
+        return
+    window = [(int(hash_slots_np(np.array([id_i]), C)[0]) + p) & (C - 1)
+              for p in range(P)]
+    for s in window:  # rule 1: refresh
+        if s in table and table[s][0] == id_i:
+            table[s][1] = row_i
+            table[s][2] += f_i
+            return
+    if f_i < thr:  # admission gate
+        return
+    for s in window:  # rule 2: claim a vacant slot
+        if s not in table:
+            table[s] = [id_i, row_i, f_i]
+            return
+    victim = min(window, key=lambda s: table[s][2])  # rule 3: LFU evict
+    if f_i > table[victim][2]:
+        table[victim] = [id_i, row_i, f_i]
+
+
+@given(seed=st.integers(0, 40), thr=st.sampled_from([1, 3, 8]))
+@settings(max_examples=12, deadline=None)
+def test_insert_probe_evict_matches_dict_oracle(seed, thr):
+    rng = np.random.default_rng(seed)
+    C, D, P = 64, 8, 4
+    n_ops = 150
+    ids = rng.integers(0, 500, n_ops).astype(np.int32)  # duplicates included
+    rows = rng.normal(size=(n_ops, D)).astype(np.float32)
+    freqs = rng.integers(1, 12, n_ops).astype(np.int32)
+
+    state = empty_hash_cache(C, D)
+    state, _ = cache_insert(
+        state, jnp.asarray(ids), jnp.asarray(rows), jnp.asarray(freqs),
+        thr, max_probes=P,
+    )
+
+    oracle: dict = {}
+    for i in range(n_ops):
+        _dict_oracle_insert(oracle, int(ids[i]), rows[i], int(freqs[i]), C, P, thr)
+
+    keys = np.asarray(state.keys)
+    freq = np.asarray(state.freq)
+    vals = np.asarray(state.rows)
+    want_keys = np.full((C,), EMPTY_KEY, np.int64)
+    for s, (k, r, f) in oracle.items():
+        want_keys[s] = k
+        assert freq[s] == f, (s, k)
+        np.testing.assert_array_equal(vals[s], r)
+    np.testing.assert_array_equal(keys.astype(np.int64), want_keys)
+
+    # the numpy host mirror replays the same sequence to the same table
+    host = HostHashCache(C, D, max_probes=P)
+    for i in range(n_ops):
+        host.insert(ids[i : i + 1], rows[i : i + 1], freqs[i : i + 1], thr)
+    np.testing.assert_array_equal(host.keys, want_keys)
+
+    # every id the table claims to hold is returned exactly on lookup
+    probe_rows, hit = cache_lookup(state, jnp.asarray(ids), max_probes=P)
+    hit = np.asarray(hit)
+    live = {k: r for (k, r, f) in oracle.values()}
+    for i in range(n_ops):
+        assert hit[i] == (int(ids[i]) in live)
+        if hit[i]:
+            np.testing.assert_array_equal(np.asarray(probe_rows)[i], live[int(ids[i])])
+
+
+# ------------------------------------------------------- Pallas kernel vs ref
+
+
+@pytest.mark.parametrize(
+    "C,D,bags,nnz,probes", [(64, 128, 4, 1, 4), (256, 128, 16, 4, 8), (512, 256, 8, 8, 8)]
+)
+def test_probe_gather_pool_kernel_vs_ref(C, D, bags, nnz, probes, rng):
+    state = empty_hash_cache(C, D)
+    n_ins = int(C * 0.6)
+    ins_ids = rng.choice(100_000, n_ins, replace=False).astype(np.int32)
+    ins_rows = rng.normal(size=(n_ins, D)).astype(np.float32)
+    state, _ = cache_insert(
+        state, jnp.asarray(ins_ids), jnp.asarray(ins_rows),
+        jnp.asarray(rng.integers(1, 9, n_ins).astype(np.int32)),
+        1, max_probes=probes,
+    )
+    # queries: ~60% resident ids, rest cold + some padded-invalid slots
+    q = rng.choice(ins_ids, bags * nnz).astype(np.int32)
+    cold = rng.random(q.shape) < 0.4
+    q[cold] = rng.integers(200_000, 300_000, int(cold.sum())).astype(np.int32)
+    q[rng.random(q.shape) < 0.1] = EMPTY_KEY
+    w = np.where(rng.random(q.shape) > 0.2, rng.random(q.shape), 0.0).astype(
+        np.float32
+    )
+    pooled, miss = probe_gather_pool(
+        state.keys, state.rows, jnp.asarray(q), jnp.asarray(w), bags,
+        max_probes=probes, interpret=True,
+    )
+    want_pooled, want_miss = HREF.probe_gather_pool_ref(
+        state.keys, state.rows, jnp.asarray(q), jnp.asarray(w), bags, probes
+    )
+    np.testing.assert_allclose(
+        np.asarray(pooled), np.asarray(want_pooled), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(miss), np.asarray(want_miss))
+    # kernel probe agrees with the jnp cache_lookup fast path too
+    _, hit = cache_lookup(state, jnp.asarray(q), max_probes=probes)
+    np.testing.assert_array_equal(~np.asarray(hit), np.asarray(miss))
+
+
+def test_scatter_update_kernel_vs_ref(rng):
+    C, D, K = 128, 128, 32
+    values = jnp.asarray(rng.normal(size=(C, D)).astype(np.float32))
+    slots = rng.choice(C, K, replace=False).astype(np.int32)
+    rows = rng.normal(size=(K, D)).astype(np.float32)
+    want = HREF.scatter_update_ref(values, jnp.asarray(slots), jnp.asarray(rows))
+    got = scatter_update(values, jnp.asarray(slots), jnp.asarray(rows), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+# ----------------------------------------------- DisaggEmbedding integration
+
+
+def test_hash_cache_transparent_in_lookup(trivial_mesh, rng):
+    specs = [
+        TableSpec("a", 997, nnz=4),
+        TableSpec("b", 512, nnz=2, pooling="mean"),
+        TableSpec("c", 33, nnz=1),
+    ]
+    B, F, nnz = 8, 3, 4
+    idx = np.zeros((B, F, nnz), np.int32)
+    msk = np.zeros((B, F, nnz), bool)
+    for f, s in enumerate(specs):
+        idx[:, f, : s.nnz] = rng.integers(0, s.vocab, (B, s.nnz))
+        msk[:, f, : s.nnz] = True
+    emb = DisaggEmbedding(specs=specs, dim=16, num_shards=1)
+    params = emb.init(jax.random.key(0))
+    ref = emb.lookup_reference(params, jnp.asarray(idx), jnp.asarray(msk))
+    hot = rng.choice(emb.sharded.raw_rows, 200, replace=False)
+    cache = make_hash_cache_from_table(emb, params, hot, 512, mesh=trivial_mesh)
+    out = jax.jit(
+        lambda p, i, m, c: emb.lookup(p, i, m, mesh=trivial_mesh, cache=c)
+    )(params, jnp.asarray(idx), jnp.asarray(msk), cache)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6
+    )
+
+
+# ------------------------------------------------------- tiered miss path e2e
+
+
+def test_tiered_miss_path_zipf_bytes_and_correctness(rng):
+    specs = (
+        TableSpec("a", 40_000, nnz=4),
+        TableSpec("b", 10_000, nnz=2, pooling="mean"),
+        TableSpec("c", 64, nnz=1),
+    )
+    dim, shards = 16, 4
+    emb = DisaggEmbedding(specs=specs, dim=dim, num_shards=shards)
+    params = emb.init(jax.random.key(1))
+    tables = make_fused_tables(specs, dim, shards)
+    svc = HostLookupService(tables, np.asarray(params["table"]))
+    tiered = TieredLookupService(
+        svc,
+        num_slots=8192,
+        policy=AdmissionPolicy(admission_threshold=1.5, max_swap_in=4096),
+        refresh_every=2,
+    )
+    try:
+        def batch():
+            return syn.recsys_batch(rng, specs, 64, alpha=1.3)
+
+        for _ in range(12):  # warm the cache
+            b = batch()
+            tiered.lookup(b["indices"], b["mask"])
+        tiered.stats = type(tiered.stats)()  # measure steady state only
+
+        for _ in range(20):
+            b = batch()
+            out = tiered.lookup(b["indices"], b["mask"])
+            ref = emb.lookup_reference(
+                params, jnp.asarray(b["indices"]), jnp.asarray(b["mask"])
+            )
+            np.testing.assert_allclose(
+                out, np.asarray(ref), rtol=1e-4, atol=1e-5
+            )
+        s = tiered.stats
+        assert s.hit_rate > 0.5, s.summary()
+        total_moved = s.bytes_network + s.bytes_swap_in
+        assert total_moved * 2 <= s.bytes_no_cache, s.summary()  # >= 2x saving
+    finally:
+        svc.close()
+
+
+def test_tiered_lookup_handles_all_hot_batch(rng):
+    """A batch fully absorbed by the cache must not post any subrequest."""
+    specs = (TableSpec("a", 128, nnz=2),)
+    emb = DisaggEmbedding(specs=specs, dim=8, num_shards=2)
+    params = emb.init(jax.random.key(3))
+    tables = make_fused_tables(specs, 8, 2)
+    svc = HostLookupService(tables, np.asarray(params["table"]))
+    tiered = TieredLookupService(svc, num_slots=256, refresh_every=10**9)
+    try:
+        # preload the whole vocab
+        ids = np.arange(128, dtype=np.int64)
+        tiered.cache.insert(
+            ids, np.asarray(params["table"])[:128], np.full(128, 10), 1.0
+        )
+        b = syn.recsys_batch(rng, specs, 16)
+        before = tiered.stats.bytes_network
+        out = tiered.lookup(b["indices"], b["mask"])
+        assert tiered.stats.bytes_network == before
+        assert tiered.stats.hit_rate == 1.0
+        ref = emb.lookup_reference(
+            params, jnp.asarray(b["indices"]), jnp.asarray(b["mask"])
+        )
+        np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-5, atol=1e-6)
+    finally:
+        svc.close()

@@ -28,8 +28,8 @@ def _run(code: str):
 
 PREAMBLE = """
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 """
 

@@ -38,10 +38,9 @@ def test_registry_complete():
 def test_cell_builds_are_structured():
     """Every (arch x shape) build produces matching args/shardings trees
     (uses the production 16x16 mesh abstractly — no device allocation)."""
-    from jax.sharding import AbstractMesh, AxisType
+    from repro.compat import abstract_mesh
 
-    mesh = AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     for arch_id in configs.ASSIGNED:
         arch = configs.get(arch_id)
         for shape in arch.shapes:
