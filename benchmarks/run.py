@@ -37,12 +37,19 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
 
-    from benchmarks import hotcache_bench
+    from benchmarks import hotcache_bench, prefetch_bench
 
     hotcache_derive = lambda o: (  # noqa: E731
         f"bytes_reduction={o['bytes_reduction']:.2f}x "
         f"hit_rate={o['hit_rate']:.2f} "
         f"flat_us={o['flat_slab_us']:.0f} hash_us={o['hash_cache_us']:.0f}"
+    )
+    prefetch_derive = lambda o: (  # noqa: E731
+        f"hit {o['hit_rate_base']:.2f}->{o['hit_rate_prefetch']:.2f} "
+        f"miss_bytes={o['miss_bytes_reduction']:.2f}x "
+        f"useful={o['prefetch_useful_rate']:.2f} "
+        f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
+        f"kernel={'ok' if o['kernel_matches_ref'] else 'MISMATCH'}"
     )
 
     if opts.smoke:
@@ -50,6 +57,11 @@ def main(argv=None) -> None:
             "hotcache_smoke",
             lambda: hotcache_bench.run(smoke=True),
             hotcache_derive,
+        )
+        bench(
+            "prefetch_smoke",
+            lambda: prefetch_bench.run(smoke=True),
+            prefetch_derive,
         )
         failed = [r for r in rows if r[2] == "FAILED"]
         if failed:
@@ -100,6 +112,7 @@ def main(argv=None) -> None:
         lambda o: f"attention_us={o['attention_us']:.0f}",
     )
     bench("hotcache", hotcache_bench.run, hotcache_derive)
+    bench("prefetch", prefetch_bench.run, prefetch_derive)
 
     print()
     try:

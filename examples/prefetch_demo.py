@@ -1,0 +1,94 @@
+"""Prefetch demo: the §3.1.2 spatial-locality pillar, end to end.
+
+Serves a co-occurrence-structured stream (persistent pattern pool with
+periodic churn) through two identical tiered lookup stacks — one demand-only
+(the PR-1 hotcache), one with the co-occurrence miner + piggybacked
+prefetcher — and prints what spatial prefetch buys at equal cache capacity:
+the hit-rate lift, the miss-path wire bytes it strips, how many speculative
+rows actually served a hit, and proof of the invariance contract (outputs
+are *bit-equal* with prefetch on and off: prefetch moves bytes earlier, it
+never changes results).
+
+  PYTHONPATH=src python examples/prefetch_demo.py
+"""
+import numpy as np
+import jax
+
+from repro.core.embedding import DisaggEmbedding
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data.synthetic import CooccurrenceWorkload
+from repro.hotcache import AdmissionPolicy, TieredLookupService
+from repro.prefetch import CooccurrenceMiner, PrefetchEngine, PrefetchPolicy
+
+
+def serve(tables, table_np, batches, prefetcher):
+    svc = HostLookupService(tables, table_np)
+    tiered = TieredLookupService(
+        svc,
+        num_slots=4096,
+        policy=AdmissionPolicy(admission_threshold=3.0, max_swap_in=1024),
+        refresh_every=2,
+        prefetcher=prefetcher,
+    )
+    try:
+        outs = [tiered.lookup(b["indices"], b["mask"]) for b in batches]
+    finally:
+        svc.close()
+    return tiered.stats, outs
+
+
+def main():
+    specs = (
+        TableSpec("history", 40_000, nnz=8),
+        TableSpec("item", 10_000, nnz=4),
+    )
+    dim, shards = 32, 4
+    emb = DisaggEmbedding(specs=specs, dim=dim, num_shards=shards)
+    params = emb.init(jax.random.key(0))
+    tables = make_fused_tables(specs, dim, shards)
+    table_np = np.asarray(params["table"])
+
+    workload = CooccurrenceWorkload(
+        specs, batch=64, alpha=1.03, cooccur_frac=0.7, pool_size=256,
+        pattern_alpha=1.15, drift_every=8, drift_frac=0.15, seed=7,
+    )
+    batches = [workload.next_batch() for _ in range(60)]
+    print("serving 60 batches of a drifting pattern-pool workload, twice...")
+
+    base, out_base = serve(tables, table_np, batches, None)
+    engine = PrefetchEngine(
+        CooccurrenceMiner(list_len=16, max_rows=16_384, decay=0.99),
+        PrefetchPolicy(k_neighbors=12, byte_budget=1 << 18, min_score=1.0),
+    )
+    pf, out_pf = serve(tables, table_np, batches, engine)
+
+    assert all(np.array_equal(a, b) for a, b in zip(out_base, out_pf))
+    print("invariance holds: pooled outputs bit-equal with prefetch on/off ✓")
+    ref = emb.lookup_reference(
+        params, batches[-1]["indices"], batches[-1]["mask"]
+    )
+    np.testing.assert_allclose(out_pf[-1], np.asarray(ref), rtol=1e-4, atol=1e-5)
+    print("and both equal the single-device oracle ✓\n")
+
+    print(f"              {'demand-only':>12} {'with prefetch':>14}")
+    print(f"hit rate      {base.hit_rate:>12.3f} {pf.hit_rate:>14.3f}")
+    print(f"miss bytes    {base.bytes_network:>12} {pf.bytes_network:>14}")
+    print(f"swap-in bytes {base.bytes_swap_in:>12} {pf.bytes_swap_in:>14}")
+    print(f"prefetch bytes{base.bytes_prefetch:>12} {pf.bytes_prefetch:>14}")
+    print(
+        f"\nmined {engine.miner.tracked_rows} rows' neighbor lists from "
+        f"{engine.miner.pairs_observed} co-occurrence pairs; "
+        f"{pf.prefetch_issued} rows prefetched, {pf.prefetch_hits} served a "
+        f"hit before first touch ({pf.prefetch_useful_rate:.0%} useful)"
+    )
+    print(
+        f"miss-path wire bytes: {base.bytes_network >> 10} KiB -> "
+        f"{pf.bytes_network >> 10} KiB "
+        f"({base.bytes_network / max(1, pf.bytes_network):.2f}x reduction "
+        f"at equal cache capacity)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -151,6 +151,7 @@ class CachePlan:
         default_factory=lambda: np.zeros((0,), np.int64)
     )  # LFU seeds aligned with hot_ids
     admission_threshold: float = 1.0  # miss-path admission floor
+    prefetch_budget_bytes: int = 0  # per-refresh piggyback cap (repro.prefetch)
 
 
 class AdaptiveCacheController:
@@ -168,6 +169,7 @@ class AdaptiveCacheController:
         max_rows: int = 2_000_000,
         field_replication: bool = True,
         load_factor: float = 0.7,
+        prefetch_frac: float = 0.25,
     ):
         self.specs = tuple(specs)
         self.dim = dim
@@ -181,6 +183,11 @@ class AdaptiveCacheController:
         if not 0.0 < load_factor <= 1.0:
             raise ValueError("load_factor must be in (0, 1]")
         self.load_factor = load_factor  # hash-table fill target (probe cost)
+        if not 0.0 <= prefetch_frac <= 1.0:
+            raise ValueError("prefetch_frac must be in [0, 1]")
+        # Share of the swap-in channel the §3.1.2 spatial prefetcher may
+        # piggyback on per refresh (0 disables prefetch budgeting).
+        self.prefetch_frac = prefetch_frac
 
     def observe(self, batch_size: int, row_ids: np.ndarray) -> None:
         self.monitor.observe(batch_size)
@@ -222,10 +229,23 @@ class AdaptiveCacheController:
         # Floored so the plan's own hot_freqs (also floored) always clear it.
         admission = float(np.floor(scores[-1])) if len(scores) else 1.0
         admission = max(1.0, admission)
+        # Spatial-prefetch piggyback budget: a fraction of one refresh's
+        # worth of swap-in bytes.  The channel is shared with demand misses,
+        # so under high load speculation is throttled hard (§3.1.1's
+        # swap-in rate limit extends to §3.1.2's prefetch traffic).  "High"
+        # is judged against the cache-LESS system ceiling — a fixed point of
+        # the memory model — not against the batch the budget was derived
+        # from (which would tautologically always read as high).
+        pf_budget = int(self.prefetch_frac * capacity * self.bytes_per_row)
+        if capacity and self.monitor.is_high_load(
+            self.memory_model.max_batch_given_cache(0)
+        ):
+            pf_budget //= 4
         reason = (
             f"budget={budget>>20}MiB rows={capacity} slots={hash_slots} "
             f"adm={admission:.1f} rep_fields={replicated} "
-            f"load={self.monitor.smoothed_batch:.0f}"
+            f"load={self.monitor.smoothed_batch:.0f} "
+            f"pf_budget={pf_budget>>10}KiB"
         )
         return CachePlan(
             capacity_rows=capacity,
@@ -235,4 +255,5 @@ class AdaptiveCacheController:
             hash_slots=hash_slots,
             hot_freqs=np.maximum(scores, 1.0).astype(np.int64),
             admission_threshold=admission,
+            prefetch_budget_bytes=pf_budget,
         )

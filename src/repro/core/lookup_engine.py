@@ -53,8 +53,11 @@ class EmbeddingServer:
         """Fig 4(b): partial pooling pushed down to the server's CPU.
 
         Returns [num_bags, D] partial sums (bytes ~ num_bags * D).
+        Accumulates in float64 (f32 rows are exactly representable) so the
+        pooled result does not depend on how the hotcache/prefetch tier
+        splits a bag between servers — see hotcache.miss_path.
         """
-        out = np.zeros((num_bags, self.rows.shape[1]), self.rows.dtype)
+        out = np.zeros((num_bags, self.rows.shape[1]), np.float64)
         np.add.at(out, bag_ids, self.rows[row_ids - self.start_row])
         return out
 
@@ -204,15 +207,16 @@ class HostLookupService:
     ) -> np.ndarray:
         """[B,F,nnz] -> [B,F,D] pooled. Fans subrequests out per server.
 
-        mean_normalize=False returns raw per-bag SUMS: callers that merge
-        this with another tier (the hotcache miss path) must normalize mean
-        fields once at the end, over the full validity counts.
+        mean_normalize=False returns raw per-bag SUMS (float64 partials so
+        tier merging is split-invariant): callers that merge this with
+        another tier (the hotcache miss path) must normalize mean fields
+        once at the end, over the full validity counts.
         """
         B, F, NNZ = indices.shape
         offs = self.tables.field_offsets_array()
         fused = (indices.astype(np.int64) + offs[None, :, None]).ravel()
         bag = np.broadcast_to(
-            (np.arange(B * F) // 1).reshape(B, F, 1), (B, F, NNZ)
+            np.arange(B * F).reshape(B, F, 1), (B, F, NNZ)
         ).ravel()
         valid = mask.ravel()
         fused, bag = fused[valid], bag[valid]
@@ -246,7 +250,7 @@ class HostLookupService:
         for r in reqs:
             r.done.wait()
 
-        out = np.zeros((num_bags, D), np.float32)
+        out = np.zeros((num_bags, D), np.float64)
         for s, res in enumerate(results):
             if res is None:
                 continue
@@ -258,11 +262,13 @@ class HostLookupService:
         # Mean-pool fields divide by their valid counts.
         out = out.reshape(B, F, D)
         if not mean_normalize:
-            return out
-        counts = mask.sum(-1).astype(np.float32)
+            return out  # f64 raw sums: exact merge with the cache tier
+        counts = mask.sum(-1).astype(np.float64)
         mean_mask = np.asarray([s.pooling == "mean" for s in self.tables.specs])
         denom = np.maximum(counts, 1.0)[..., None]
-        return np.where(mean_mask[None, :, None], out / denom, out)
+        return np.where(
+            mean_mask[None, :, None], out / denom, out
+        ).astype(np.float32)
 
     def gather_rows(self, row_ids: np.ndarray) -> np.ndarray:
         """Raw rows by fused id — the hotcache swap-in fetch (off the serving
@@ -284,6 +290,13 @@ class HostLookupService:
         fig 4(a) raw mode sends one entry per *row hit*; fig 4(b) pushdown
         sends one entry per (server, bag) with >=1 hit — the partial pool.
         Pushdown <= raw always, with equality at one hit per (server, bag).
+
+        The model prices vectors at the table itemsize (f32): a production
+        deployment quantizes partial pools back to the row dtype on the
+        wire.  Inside this host-process reproduction the partials keep the
+        f64 accumulator precision end to end — that implementation detail
+        (not a wire property) is what upgrades the hotcache/prefetch
+        result-invariance from allclose to bit-equal.
         """
         B, F, _ = indices.shape
         D = self.servers[0].rows.shape[1]

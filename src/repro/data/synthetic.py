@@ -77,6 +77,88 @@ def recsys_batch(
     return out
 
 
+@dataclasses.dataclass
+class CooccurrenceWorkload:
+    """Stateful batch stream with a *persistent* co-occurrence pattern pool.
+
+    ``recsys_batch`` redraws its pattern pool per call, so its spatial
+    structure lives only within one batch.  Real traces repeat item bundles
+    across requests for hours (the §3.1.2 locality FlexEMR prefetches on);
+    this generator keeps one pool per multi-hot field for its lifetime, with
+    zipf-skewed *pattern* popularity (some bundles are hot) and optional
+    churn: every ``drift_every`` batches a ``drift_frac`` of patterns is
+    redrawn — the regime where co-occurrence prefetching keeps paying after
+    warmup, because the demand cache must re-learn every new bundle member
+    by member while the miner maps it after a few sightings.
+
+    Bags not reusing a pattern fall back to independent zipf draws, and bag
+    fill is variable exactly as in ``recsys_batch``.
+    """
+
+    tables: tuple[TableSpec, ...]
+    batch: int = 64
+    alpha: float = 1.05
+    cooccur_frac: float = 0.5
+    pool_size: int = 256
+    pattern_alpha: float = 1.1  # zipf skew over patterns (hot bundles)
+    drift_every: int = 0  # batches between pool churn events (0 = static)
+    drift_frac: float = 0.1  # fraction of patterns redrawn per churn
+    n_dense: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._pools = {
+            f: zipf_indices(self._rng, t.vocab, (self.pool_size, t.nnz),
+                            self.alpha)
+            for f, t in enumerate(self.tables) if t.nnz > 1
+        }
+        self._batches_emitted = 0
+
+    def drift(self) -> int:
+        """Churn the pools: redraw ``drift_frac`` of each field's patterns."""
+        n = max(1, int(self.pool_size * self.drift_frac))
+        for f, pool in self._pools.items():
+            victims = self._rng.choice(self.pool_size, n, replace=False)
+            pool[victims] = zipf_indices(
+                self._rng, self.tables[f].vocab, (n, pool.shape[1]), self.alpha
+            )
+        return n
+
+    def next_batch(self) -> dict:
+        rng = self._rng
+        if (
+            self.drift_every
+            and self._batches_emitted
+            and self._batches_emitted % self.drift_every == 0
+        ):
+            self.drift()
+        self._batches_emitted += 1
+        F = len(self.tables)
+        nnz = max(t.nnz for t in self.tables)
+        indices = np.zeros((self.batch, F, nnz), np.int32)
+        mask = np.zeros((self.batch, F, nnz), bool)
+        for f, t in enumerate(self.tables):
+            k = t.nnz
+            draws = zipf_indices(rng, t.vocab, (self.batch, k), self.alpha)
+            if f in self._pools and self.cooccur_frac > 0:
+                reuse = rng.random(self.batch) < self.cooccur_frac
+                pick = zipf_indices(rng, self.pool_size, (self.batch,),
+                                    self.pattern_alpha)
+                draws = np.where(reuse[:, None], self._pools[f][pick], draws)
+            indices[:, f, :k] = draws
+            fill = (rng.integers(1, k + 1, self.batch) if k > 1
+                    else np.ones(self.batch, np.int64))
+            mask[:, f, :k] = np.arange(k)[None, :] < fill[:, None]
+        out = {"indices": indices, "mask": mask,
+               "labels": rng.integers(0, 2, self.batch).astype(np.float32)}
+        if self.n_dense:
+            out["dense"] = rng.normal(
+                size=(self.batch, self.n_dense)
+            ).astype(np.float32)
+        return out
+
+
 def mind_batch(rng, item_vocab: int, batch: int, hist_len: int, alpha=1.05) -> dict:
     hist = zipf_indices(rng, item_vocab, (batch, hist_len), alpha).astype(np.int32)
     lens = rng.integers(hist_len // 4, hist_len + 1, batch)

@@ -18,6 +18,16 @@ numpy — the form the serving runtime (which lives outside jit) consumes.
 
 Mean-pooled fields are normalized once at the end over the FULL validity
 counts, so splitting a bag between cache hits and server misses is exact.
+All tier merging accumulates in float64 over the (exactly representable)
+float32 rows, so *where* a row is served from — cache, wire, or prefetch —
+does not perturb the pooled result: the repro.prefetch result-invariance
+contract rests on this.
+
+When a ``repro.prefetch.PrefetchEngine`` is attached, the tier also becomes
+the spatial-locality prefetch channel (§3.1.2): every lookup feeds the
+co-occurrence miner, every refresh's swap-in fetch piggybacks the admitted
+rows' top-k partners under the engine's byte budget, and hits served by a
+prefetched row before its first touch are attributed in the stats.
 """
 from __future__ import annotations
 
@@ -31,6 +41,7 @@ from repro.hotcache.policy import AdmissionPolicy, select_admissions
 
 if TYPE_CHECKING:  # annotation-only: a runtime import would close the cycle
     from repro.core.lookup_engine import HostLookupService  # noqa: F401
+    from repro.prefetch.prefetcher import PrefetchEngine  # noqa: F401
     # core.embedding -> hotcache -> miss_path -> lookup_engine -> core.embedding
 from repro.hotcache.table import EMPTY_KEY, hash_slots_np, next_pow2
 
@@ -45,6 +56,10 @@ class HostHashCache:
         self.keys = np.full((num_slots,), EMPTY_KEY, np.int64)
         self.rows = np.zeros((num_slots, dim), np.float32)
         self.freq = np.zeros((num_slots,), np.float64)
+        # Prefetch attribution: True while a slot holds a speculatively
+        # fetched row that has not yet served a hit (repro.prefetch).
+        self.prefetched = np.zeros((num_slots,), bool)
+        self.prefetch_evicted = 0  # prefetched rows evicted before any hit
 
     # ------------------------------------------------------------------ read
 
@@ -93,9 +108,15 @@ class HostHashCache:
 
     def insert(
         self, ids: np.ndarray, rows: np.ndarray, freqs: np.ndarray,
-        admission_threshold: float = 1.0,
+        admission_threshold: float = 1.0, prefetched: bool = False,
     ) -> int:
-        """Batch insert under the table.cache_insert rules; returns #admitted."""
+        """Batch insert under the table.cache_insert rules; returns #admitted.
+
+        ``prefetched=True`` marks the admitted slots for hit attribution
+        (repro.prefetch); a demand insert refreshing a still-untouched
+        prefetched row clears the mark — the demand path would have fetched
+        it anyway, so the prefetch earns no credit.
+        """
         if self.num_slots == 0:
             return 0
         admitted = 0
@@ -111,6 +132,7 @@ class HostHashCache:
                 t = window[match[0]]
                 self.rows[t] = rows[i]
                 self.freq[t] += freqs[i]
+                self.prefetched[t] &= prefetched
                 admitted += 1
                 continue
             if freqs[i] < admission_threshold:
@@ -122,9 +144,12 @@ class HostHashCache:
                 t = window[np.argmin(self.freq[window])]
                 if freqs[i] <= self.freq[t]:
                     continue  # incumbent is at least as hot: keep it
+                if self.prefetched[t]:
+                    self.prefetch_evicted += 1  # speculation lost the slot
             self.keys[t] = id_i
             self.rows[t] = rows[i]
             self.freq[t] = freqs[i]
+            self.prefetched[t] = prefetched
             admitted += 1
         return admitted
 
@@ -141,6 +166,12 @@ class TieredStats:
     bytes_network: int = 0  # what it actually carried (misses only)
     bytes_swap_in: int = 0  # refresh-path fetches
     admitted: int = 0
+    # repro.prefetch attribution (all zero when no engine is attached):
+    bytes_prefetch: int = 0  # piggybacked speculative fetch bytes
+    prefetch_issued: int = 0  # rows fetched speculatively
+    prefetch_admitted: int = 0  # ...that won a cache slot
+    prefetch_hits: int = 0  # hits served by a prefetched, untouched row
+    prefetch_evicted: int = 0  # prefetched rows evicted before any hit
 
     @property
     def hit_rate(self) -> float:
@@ -148,7 +179,17 @@ class TieredStats:
 
     @property
     def bytes_saved(self) -> int:
-        return self.bytes_no_cache - self.bytes_network - self.bytes_swap_in
+        return (
+            self.bytes_no_cache
+            - self.bytes_network
+            - self.bytes_swap_in
+            - self.bytes_prefetch
+        )
+
+    @property
+    def prefetch_useful_rate(self) -> float:
+        """Fraction of speculative fetches that served a hit first-touch."""
+        return self.prefetch_hits / max(1, self.prefetch_issued)
 
     def summary(self) -> dict:
         return {
@@ -156,8 +197,14 @@ class TieredStats:
             "bytes_no_cache": self.bytes_no_cache,
             "bytes_network": self.bytes_network,
             "bytes_swap_in": self.bytes_swap_in,
+            "bytes_prefetch": self.bytes_prefetch,
             "bytes_saved": self.bytes_saved,
             "admitted": self.admitted,
+            "prefetch_issued": self.prefetch_issued,
+            "prefetch_admitted": self.prefetch_admitted,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_evicted": self.prefetch_evicted,
+            "prefetch_useful_rate": self.prefetch_useful_rate,
         }
 
 
@@ -173,6 +220,9 @@ class TieredLookupService:
     schedule instead.  ``track_bytes=False`` skips the per-batch wire-byte
     accounting (an O(batch) np.unique per call) for latency-critical callers
     that don't consume the stats.
+
+    ``prefetcher`` (a repro.prefetch.PrefetchEngine) turns the refresh
+    fetch into the §3.1.2 piggyback channel; see the module docstring.
     """
 
     def __init__(
@@ -184,6 +234,7 @@ class TieredLookupService:
         refresh_every: int = 8,
         remote_fn=None,
         track_bytes: bool = True,
+        prefetcher: "PrefetchEngine | None" = None,
     ):
         self.service = service
         dim = service.servers[0].rows.shape[1]
@@ -191,12 +242,14 @@ class TieredLookupService:
         self.policy = policy or AdmissionPolicy()
         self.refresh_every = refresh_every
         self.track_bytes = track_bytes
+        self.prefetcher = prefetcher
         self.remote_fn = remote_fn or (
             lambda idx, cold: service.lookup(idx, cold, mean_normalize=False)
         )
         self.tracker = EmaFrequencyTracker(decay=self.policy.decay)
         self.stats = TieredStats()
         self._offsets = service.tables.field_offsets_array()
+        self._pf_evicted_seen = 0  # cache-counter baseline (survives rebuilds)
 
     # ---------------------------------------------------------------- lookup
 
@@ -208,11 +261,34 @@ class TieredLookupService:
         self.stats.lookups += int(mask.sum())
         if self.track_bytes:
             self.stats.bytes_no_cache += self.service.network_bytes(indices, mask)
+        if self.prefetcher is not None:
+            self.prefetcher.observe(fused, mask)  # mine co-occurrence online
+            self._sync_prefetch_evictions()  # incl. external plan inserts
 
-        rows, hit = self.cache.lookup(np.where(mask, fused, EMPTY_KEY), credit=True)
+        slot, hit = self.cache.probe(np.where(mask, fused, EMPTY_KEY))
         hit &= mask
         self.stats.hits += int(hit.sum())
-        out = (rows * hit[..., None]).sum(axis=2, dtype=np.float32)
+        if hit.any():
+            # LFU credit (the cache.lookup(credit=True) semantics) ...
+            np.add.at(self.cache.freq, slot[hit], 1.0)
+            # ... plus prefetch attribution: a hit on a still-marked slot is
+            # a prefetched-before-first-touch row doing its job.  Counted
+            # per unique slot (one credit per prefetched ROW, even if its
+            # first-touch batch references it in several bags) so
+            # prefetch_hits <= prefetch_issued always.
+            pf_hit = hit & self.cache.prefetched[slot]
+            if pf_hit.any():
+                touched = np.unique(slot[pf_hit])
+                self.stats.prefetch_hits += len(touched)
+                self.cache.prefetched[touched] = False
+        # float64 accumulation over exactly-representable f32 rows: the bag
+        # sum is independent of the cache/wire split (prefetch invariance).
+        if self.cache.num_slots:
+            rows = self.cache.rows[slot] * hit[..., None]
+            out = rows.sum(axis=2, dtype=np.float64)
+        else:  # probe of a 0-slot cache (pre-first-plan serving) hits nothing
+            out = np.zeros(mask.shape[:2] + (self.cache.rows.shape[1],),
+                           np.float64)
 
         cold = mask & ~hit
         if cold.any():
@@ -220,16 +296,16 @@ class TieredLookupService:
                 self.stats.bytes_network += self.service.network_bytes(
                     indices, cold
                 )
-            out += np.asarray(self.remote_fn(indices, cold), np.float32)
+            out += np.asarray(self.remote_fn(indices, cold), np.float64)
             self.tracker.update(fused[cold])
 
         out = self._mean_normalize(out, mask)
         if self.refresh_every and self.stats.batches % self.refresh_every == 0:
             self.refresh()
-        return out
+        return out.astype(np.float32)
 
     def _mean_normalize(self, sums: np.ndarray, mask: np.ndarray) -> np.ndarray:
-        counts = mask.sum(-1).astype(np.float32)
+        counts = mask.sum(-1).astype(np.float64)
         mean_mask = np.asarray(
             [s.pooling == "mean" for s in self.service.tables.specs]
         )
@@ -239,7 +315,13 @@ class TieredLookupService:
     # --------------------------------------------------------------- refresh
 
     def refresh(self) -> int:
-        """LFU swap-in: admit miss ids that cleared the admission threshold."""
+        """LFU swap-in: admit miss ids that cleared the admission threshold.
+
+        With a prefetcher attached, the swap-in fetch doubles as the §3.1.2
+        piggyback channel: the admitted rows' top-k co-occurring partners
+        ride along under the engine's byte budget, through the same LFU
+        admission rules (marked for hit attribution).
+        """
         if self.cache.num_slots == 0:
             return 0
         cand_ids, scores = self.tracker.top_k_with_scores(
@@ -249,12 +331,37 @@ class TieredLookupService:
             return 0
         ids, freqs = select_admissions(cand_ids, scores, self.policy, self.cache.keys)
         if not len(ids):
-            self.cache.decay(self.policy.decay)
+            self._decay()
             return 0
         rows = self.service.gather_rows(ids)
         entry = 4 + rows.shape[1] * rows.dtype.itemsize
         self.stats.bytes_swap_in += len(ids) * entry
         n = self.cache.insert(ids, rows, freqs, self.policy.admission_threshold)
         self.stats.admitted += n
-        self.cache.decay(self.policy.decay)
+        if self.prefetcher is not None:
+            issued0 = self.prefetcher.stats.issued
+            bytes0 = self.prefetcher.stats.bytes_prefetch
+            n_pf = self.prefetcher.piggyback(ids, self.cache, self.service)
+            self.stats.prefetch_admitted += n_pf
+            self.stats.prefetch_issued += self.prefetcher.stats.issued - issued0
+            self.stats.bytes_prefetch += (
+                self.prefetcher.stats.bytes_prefetch - bytes0
+            )
+            self._sync_prefetch_evictions()
+        self._decay()
         return n
+
+    def _sync_prefetch_evictions(self) -> None:
+        """Fold the cache's eviction counter into the cumulative stats.
+        The cache object may be rebuilt (controller resize) which resets its
+        counter; a decrease means a fresh cache, so re-baseline at zero."""
+        seen = self._pf_evicted_seen
+        if self.cache.prefetch_evicted < seen:
+            seen = 0
+        self.stats.prefetch_evicted += self.cache.prefetch_evicted - seen
+        self._pf_evicted_seen = self.cache.prefetch_evicted
+
+    def _decay(self) -> None:
+        self.cache.decay(self.policy.decay)
+        if self.prefetcher is not None:
+            self.prefetcher.decay()  # co-occurrence fades with the hot set

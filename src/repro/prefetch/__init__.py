@@ -1,0 +1,49 @@
+"""repro.prefetch — spatial-locality prefetch subsystem (§3.1.2).
+
+The second FlexEMR locality pillar: rows that co-occur within a lookup
+co-occur again.  PR 1's hotcache exploits *temporal* reuse (a hot row is
+re-requested); this subsystem exploits the *spatial* structure that
+data.synthetic plants via its pattern pools and that production traces show:
+
+  cooccur     — CountMinSketch + CooccurrenceMiner: a bounded, decayed
+                row-co-occurrence index mined online from the lookup stream
+                (per-row top-k neighbor lists over a count-min evidence
+                store).
+  kernels     — Pallas top-k-neighbor-select kernel (device half of the
+                neighbor query), validated against ref.
+  ref         — pure-jnp selection oracle (ties to the lowest index).
+  prefetcher  — PrefetchEngine: piggybacks the missed rows' top-k partners
+                onto every hotcache swap-in `gather_rows` fetch, under a
+                controller-set byte budget, admitted through the LFU policy.
+
+Wired into hotcache.miss_path (TieredLookupService mines + piggybacks and
+attributes prefetch hits), core.adaptive_cache (CachePlan.prefetch_budget_
+bytes), runtime.serving (prefetch metrics), runtime.simulator (prefetch
+accuracy/budget model + compare_prefetch sweep) and benchmarks/prefetch_
+bench.py.
+
+Invariant: prefetch changes when bytes move, never what lookups return.
+"""
+from repro.prefetch.cooccur import (
+    CooccurrenceMiner,
+    CountMinSketch,
+    topk_select_np,
+)
+from repro.prefetch.kernels import topk_neighbor_select
+from repro.prefetch.prefetcher import (
+    PrefetchEngine,
+    PrefetchPolicy,
+    PrefetchStats,
+)
+from repro.prefetch.ref import topk_neighbor_select_ref
+
+__all__ = [
+    "CooccurrenceMiner",
+    "CountMinSketch",
+    "PrefetchEngine",
+    "PrefetchPolicy",
+    "PrefetchStats",
+    "topk_neighbor_select",
+    "topk_neighbor_select_ref",
+    "topk_select_np",
+]

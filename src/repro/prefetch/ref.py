@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the prefetch Pallas kernel (the equality target).
+
+Semantics are defined here once; repro.prefetch.kernels must match exactly
+(bit-equal values, identical indices).  Tie-breaking is total: equal scores
+resolve to the lowest column index (stable descending sort), so the kernel,
+this oracle, and cooccur.topk_select_np agree on every input including
+repeated scores and -inf padding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_neighbor_select_ref(
+    scores: jax.Array,  # [M, L] f32 candidate-neighbor scores (-inf = absent)
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row top-k by score, ties to the lowest index.
+
+    Returns (values [M, k] f32, indices [M, k] int32).
+    """
+    if k > scores.shape[-1]:
+        raise ValueError(f"k={k} exceeds candidate width {scores.shape[-1]}")
+    order = jnp.argsort(-scores, axis=-1)  # jnp.argsort is stable
+    idx = order[:, :k]
+    vals = jnp.take_along_axis(scores, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)

@@ -44,11 +44,20 @@ class ServeMetrics:
     bytes_no_cache: int = 0  # wire bytes a cache-less deployment would move
     bytes_network: int = 0  # wire bytes actually moved (misses only)
     bytes_swap_in: int = 0  # hotcache refresh fetches
+    bytes_prefetch: int = 0  # §3.1.2 piggybacked speculative fetches
+    prefetch_issued: int = 0  # rows fetched speculatively
+    prefetch_hits: int = 0  # hits served by prefetched-before-first-touch rows
+    prefetch_evicted: int = 0  # speculative rows evicted before any hit
     latencies: list = dataclasses.field(default_factory=list)
 
     @property
     def bytes_saved(self) -> int:
-        return self.bytes_no_cache - self.bytes_network - self.bytes_swap_in
+        return (
+            self.bytes_no_cache
+            - self.bytes_network
+            - self.bytes_swap_in
+            - self.bytes_prefetch
+        )
 
     def summary(self) -> dict:
         lat = sorted(self.latencies) or [0.0]
@@ -64,8 +73,14 @@ class ServeMetrics:
             "network_bytes": self.bytes_network,
             "bytes_no_cache": self.bytes_no_cache,
             "bytes_swap_in": self.bytes_swap_in,
+            "bytes_prefetch": self.bytes_prefetch,
             "bytes_saved": self.bytes_saved,
             "bytes_saved_frac": self.bytes_saved / max(1, self.bytes_no_cache),
+            "prefetch_issued": self.prefetch_issued,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_evicted": self.prefetch_evicted,
+            "prefetch_useful_rate": self.prefetch_hits
+            / max(1, self.prefetch_issued),
         }
 
 
@@ -82,6 +97,7 @@ class FlexEMRServer:
         pushdown: bool = True,
         hedge_timeout: float = 0.05,
         cache_refresh_every: int = 16,
+        prefetcher=None,  # repro.prefetch.PrefetchEngine | None
     ):
         self.cfg = cfg
         self.params = params
@@ -96,15 +112,20 @@ class FlexEMRServer:
         self.cache_refresh_every = cache_refresh_every
         self.batcher = BucketBatcher()
         self.metrics = ServeMetrics()
+        self.prefetcher = prefetcher
         # repro.hotcache tiered front end over the lookup service.  The hash
         # cache starts empty (0 slots) until the controller's first plan;
         # refresh_every=0: the controller owns the swap-in schedule, not the
         # tier's own LFU loop.  The hedged remote keeps straggler mitigation.
+        # With a prefetcher, the tier mines co-occurrence and attributes
+        # prefetch hits; the piggyback fetch itself rides the plan swap-in
+        # (_apply_cache_plan), since the controller owns that schedule here.
         self._tiered = TieredLookupService(
             self.service,
             num_slots=0,
             refresh_every=0,
             remote_fn=self._hedged_remote,
+            prefetcher=prefetcher,
         )
         self._plan_swap_in_bytes = 0
         self._dense = jax.jit(self._dense_fn)
@@ -153,10 +174,10 @@ class FlexEMRServer:
             fused = indices.astype(np.int64) + self._offsets[None, :, None]
             fused_c = np.where(cold_mask, fused, 0)
             rows = self.table_np[fused_c] * cold_mask[..., None]
-            out = rows.sum(axis=2).astype(np.float32)
+            out = rows.sum(axis=2, dtype=np.float64)  # split-invariant sums
             done.wait()  # drain the engine result; discard
         else:
-            out = result[0].astype(np.float32)
+            out = np.asarray(result[0], np.float64)
         self.metrics.lookup_seconds += time.perf_counter() - t0
         return out
 
@@ -171,6 +192,13 @@ class FlexEMRServer:
         self.metrics.bytes_no_cache = s.bytes_no_cache
         self.metrics.bytes_network = s.bytes_network
         self.metrics.bytes_swap_in = s.bytes_swap_in + self._plan_swap_in_bytes
+        self.metrics.prefetch_hits = s.prefetch_hits
+        self.metrics.prefetch_evicted = s.prefetch_evicted
+        if self.prefetcher is not None:
+            # Piggybacks ride the plan swap-in here, so read the engine's
+            # own counters (the tier's only cover self-driven refreshes).
+            self.metrics.prefetch_issued = self.prefetcher.stats.issued
+            self.metrics.bytes_prefetch = self.prefetcher.stats.bytes_prefetch
         return out
 
     # --------------------------------------------------------------- serving
@@ -241,6 +269,12 @@ class FlexEMRServer:
             # The planned rows ARE the chosen hot set: threshold 1 (always
             # admit); plan.admission_threshold gates runtime misses instead.
             cache.insert(ids, rows, freqs, 1.0)
+            if self.prefetcher is not None:
+                # §3.1.2 piggyback: the plan's swap-in fetch carries the new
+                # rows' co-occurring partners, under the plan's byte budget.
+                self.prefetcher.set_byte_budget(plan.prefetch_budget_bytes)
+                self.prefetcher.piggyback(ids[~already], cache, self.service)
+                self.prefetcher.decay()
         logger.info("cache plan applied: %s", plan.reason)
 
     def close(self):

@@ -53,6 +53,17 @@ class SimConfig:
     # occupancy, no server visit) — that happens w.p. h^rows_per_subrequest.
     cache_hit_rate: float = 0.0
     rows_per_subrequest: int = 32
+    # repro.prefetch piggyback model (§3.1.2): every posted subrequest
+    # carries `prefetch_budget_frac` extra response bytes of speculative
+    # neighbor rows, of which `prefetch_accuracy` land in the cache before
+    # their first reference, each then absorbing ~`prefetch_reuse` future
+    # miss references (one spatial fetch buys a window of temporal reuse).
+    # Accuracy ~0 is pure overhead; high accuracy converts the piggyback
+    # bytes into a hit rate a demand-only cache of the same capacity cannot
+    # reach in time.
+    prefetch_accuracy: float = 0.0
+    prefetch_budget_frac: float = 0.0
+    prefetch_reuse: float = 4.0
 
 
 class LookupSimulator:
@@ -80,16 +91,32 @@ class LookupSimulator:
             self.server_weight = np.full(cfg.n_servers, 1.0 / cfg.n_servers)
         self.rng = rng
 
+    def effective_hit_rate(self) -> float:
+        """Demand hit rate plus the prefetch-converted share of the misses."""
+        cfg = self.cfg
+        gain = (
+            cfg.prefetch_accuracy
+            * min(1.0, cfg.prefetch_budget_frac * cfg.prefetch_reuse)
+            * (1.0 - cfg.cache_hit_rate)
+        )
+        return min(1.0, cfg.cache_hit_rate + gain)
+
     def run(self) -> dict:
         cfg = self.cfg
         engine_free = np.zeros(cfg.n_engines)
+        engine_busy = np.zeros(cfg.n_engines)  # summed post occupancy
         unit_free = np.zeros(cfg.n_units)
+        # Who holds each unit *while it is busy*: a unit is released the
+        # moment its post completes (unit_free), so ownership never goes
+        # stale across batches — contention is paid only when a post from a
+        # different engine arrives while the unit is actually held.
         unit_owner = np.full(cfg.n_units, -1)
         issued = 0
         events: list[tuple[float, int]] = []  # (time, batch_id) completions
         now = 0.0
 
         fanout = max(2, cfg.n_servers // 2)
+        hit_rate = self.effective_hit_rate()
 
         def issue_batch(t_start: float) -> float:
             """Post one fan-out batch; returns completion time."""
@@ -100,11 +127,15 @@ class LookupSimulator:
             active = self.rng.choice(
                 cfg.n_servers, size=fanout, replace=True, p=self.server_weight
             )
-            if cfg.cache_hit_rate > 0.0:
+            if hit_rate > 0.0:
                 # Fully-hit subrequests never leave the ranker.
-                p_all_hit = cfg.cache_hit_rate ** cfg.rows_per_subrequest
+                p_all_hit = hit_rate ** cfg.rows_per_subrequest
                 active = active[self.rng.random(len(active)) >= p_all_hit]
-            sub_bytes = cfg.bytes_per_subrequest * (1.0 - cfg.cache_hit_rate)
+            # Miss bytes shrink with the (prefetch-boosted) hit rate; the
+            # piggybacked neighbor rows ride every posted response.
+            sub_bytes = cfg.bytes_per_subrequest * (
+                (1.0 - hit_rate) + cfg.prefetch_budget_frac
+            )
             # Even a fully-cached batch pays the ranker-local probe: floor
             # the completion at one t_post so hit_rate=1.0 yields a finite
             # (local-work-bound) throughput instead of a zero makespan.
@@ -113,14 +144,18 @@ class LookupSimulator:
                 e = self.conn_engine[s]
                 u = self.conn_unit[s]
                 t = max(t_start, engine_free[e])
-                # unit arbitration
-                t = max(t, unit_free[u])
                 post = cfg.t_post
-                if unit_owner[u] not in (-1, e):
-                    post += cfg.t_contention  # cross-engine lock (Fig 6 left)
+                if t < unit_free[u]:
+                    # Unit still held: serialize behind the holder, paying
+                    # the cross-engine lock handoff if the holder differs
+                    # (Fig 6 left).  A free unit carries no stale owner.
+                    if unit_owner[u] != e:
+                        post += cfg.t_contention
+                    t = unit_free[u]
                 unit_owner[u] = e
                 t_done_post = t + post
                 engine_free[e] = t_done_post
+                engine_busy[e] += post
                 unit_free[u] = t_done_post
                 resp = (
                     t_done_post
@@ -149,9 +184,13 @@ class LookupSimulator:
                 heapq.heappush(events, (c, issued))
                 issued += 1
         makespan = now
+        utilization = engine_busy / max(makespan, 1e-12)
         return {
             "throughput_batches_per_s": cfg.n_batches / makespan,
             "makespan_s": makespan,
+            "effective_hit_rate": hit_rate,
+            "engine_busy_s": engine_busy.tolist(),
+            "engine_utilization": utilization.tolist(),
         }
 
     def _migrate(self):
@@ -211,6 +250,42 @@ def compare_hit_rates(
     out["speedup_at_max_hit"] = (
         out[rates[-1]]["throughput_batches_per_s"]
         / out[rates[0]]["throughput_batches_per_s"]
+    )
+    return out
+
+
+def compare_prefetch(
+    accuracies=(0.0, 0.25, 0.5, 0.75, 0.95),
+    budget_frac: float = 0.25,
+    cache_hit_rate: float = 0.5,
+    **overrides,
+) -> dict:
+    """§3.1.2 sweep: throughput vs prefetch accuracy at a fixed piggyback
+    budget, against the demand-only cache baseline.
+
+    The piggyback bytes are pure overhead at accuracy 0 and convert misses
+    into hits as accuracy rises; in the wire-bound regime the crossover is
+    where speculation starts paying for its own bytes.
+    """
+    base_cfg = SimConfig(cache_hit_rate=cache_hit_rate, **overrides)
+    out: dict = {"baseline": LookupSimulator(base_cfg).run()}
+    accs = sorted(float(a) for a in accuracies)
+    for a in accs:
+        cfg = SimConfig(
+            cache_hit_rate=cache_hit_rate,
+            prefetch_accuracy=a,
+            prefetch_budget_frac=budget_frac,
+            **overrides,
+        )
+        out[a] = LookupSimulator(cfg).run()
+    base = out["baseline"]["throughput_batches_per_s"]
+    out["speedup_at_best_accuracy"] = (
+        out[accs[-1]]["throughput_batches_per_s"] / base
+    )
+    out["overhead_at_zero_accuracy"] = (
+        out[accs[0]]["throughput_batches_per_s"] / base
+        if accs[0] == 0.0
+        else float("nan")
     )
     return out
 

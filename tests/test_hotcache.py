@@ -242,6 +242,122 @@ def test_tiered_miss_path_zipf_bytes_and_correctness(rng):
         svc.close()
 
 
+def _colliding_ids(C, P, n, start=0):
+    """n ids whose probe windows all share one home slot (true collisions)."""
+    home = hash_slots_np(np.arange(start, start + 200_000), C)
+    target = home[0]
+    ids = np.flatnonzero(home == target)[:n] + start
+    assert len(ids) == n, "not enough colliding ids in range"
+    return ids.astype(np.int64)
+
+
+def test_host_cache_insert_collision_and_full_table(rng):
+    """satellite: the window-conflict paths of HostHashCache.insert —
+    vacant fill, admission gate, LFU eviction, tie-keeps-incumbent — on ids
+    that genuinely share one probe window."""
+    C, D, P = 64, 8, 4
+    cache = HostHashCache(C, D, max_probes=P)
+    ids = _colliding_ids(C, P, P + 3)
+    rows = rng.normal(size=(len(ids), D)).astype(np.float32)
+
+    # 1. fill the window with the first P ids (freqs 10..10+P-1)
+    n = cache.insert(ids[:P], rows[:P], np.arange(10, 10 + P, dtype=float), 1.0)
+    assert n == P
+    assert cache.occupancy == P
+    for i in range(P):
+        r, hit = cache.lookup(ids[i : i + 1])
+        assert hit[0]
+        np.testing.assert_array_equal(r[0], rows[i])
+
+    # 2. window full: a colder challenger (freq below the window min) drops
+    n = cache.insert(ids[P : P + 1], rows[P : P + 1], np.array([5.0]), 1.0)
+    assert n == 0 and cache.occupancy == P
+    _, hit = cache.lookup(ids[P : P + 1])
+    assert not hit[0]
+
+    # 3. tie with the coldest incumbent (freq 10) also keeps the incumbent
+    n = cache.insert(ids[P + 1 : P + 2], rows[P + 1 : P + 2], np.array([10.0]), 1.0)
+    assert n == 0
+    _, hit = cache.lookup(ids[:1])
+    assert hit[0]
+
+    # 4. strictly hotter challenger evicts the window's LFU victim (ids[0])
+    n = cache.insert(ids[P + 2 : P + 3], rows[P + 2 : P + 3], np.array([99.0]), 1.0)
+    assert n == 1 and cache.occupancy == P
+    _, hit = cache.lookup(ids[:1])
+    assert not hit[0]  # victim gone
+    r, hit = cache.lookup(ids[P + 2 : P + 3])
+    assert hit[0]
+    np.testing.assert_array_equal(r[0], rows[P + 2])
+
+    # 5. admission gate: a fresh id below threshold never claims even a
+    # vacant slot elsewhere in the table
+    cold_id = np.array([next(
+        i for i in range(1, 10_000)
+        if i not in set(ids.tolist())
+    )], np.int64)
+    n = cache.insert(cold_id, rows[:1], np.array([1.0]), admission_threshold=5.0)
+    assert n == 0
+    # 6. re-inserting a resident id refreshes the row and accumulates freq
+    new_row = rng.normal(size=(1, D)).astype(np.float32)
+    slot, _ = cache.probe(ids[P + 2 : P + 3])
+    f_before = cache.freq[slot[0]]
+    n = cache.insert(ids[P + 2 : P + 3], new_row, np.array([2.0]), 1.0)
+    assert n == 1
+    assert cache.freq[slot[0]] == f_before + 2.0
+    r, hit = cache.lookup(ids[P + 2 : P + 3])
+    np.testing.assert_array_equal(r[0], new_row[0])
+    # 7. EMPTY_KEY entries are skipped outright
+    n = cache.insert(
+        np.array([EMPTY_KEY], np.int64), rows[:1], np.array([50.0]), 1.0
+    )
+    assert n == 0 and cache.occupancy == P
+
+
+def test_tiered_refresh_insert_decay_stress(rng):
+    """satellite: TieredLookupService.refresh under many insert/decay cycles
+    on a drifting zipf stream — table invariants must hold throughout."""
+    specs = (TableSpec("a", 20_000, nnz=4), TableSpec("b", 4_000, nnz=2))
+    emb = DisaggEmbedding(specs=specs, dim=8, num_shards=2)
+    params = emb.init(jax.random.key(7))
+    tables = make_fused_tables(specs, 8, 2)
+    svc = HostLookupService(tables, np.asarray(params["table"]))
+    tiered = TieredLookupService(
+        svc,
+        num_slots=512,  # small: force heavy eviction churn
+        policy=AdmissionPolicy(admission_threshold=1.5, max_swap_in=256),
+        refresh_every=1,  # refresh (insert+decay) every batch
+    )
+    table_np = np.asarray(params["table"])
+    try:
+        for step in range(30):
+            # drift: rotate the popular range every 10 steps
+            lo = (step // 10) * 5_000
+            b = syn.recsys_batch(rng, specs, 32, alpha=1.3)
+            b["indices"][:, 0, :] = (b["indices"][:, 0, :] + lo) % 20_000
+            tiered.lookup(b["indices"], b["mask"])
+
+            cache = tiered.cache
+            live = cache.keys != EMPTY_KEY
+            # invariant: live keys are unique
+            lk = cache.keys[live]
+            assert len(np.unique(lk)) == len(lk)
+            assert cache.occupancy <= cache.num_slots
+            # invariant: every live key is findable by its own probe...
+            if len(lk):
+                _, hit = cache.probe(lk)
+                assert hit.all()
+                # ...and holds the authoritative row bit-for-bit
+                r, _ = cache.lookup(lk)
+                np.testing.assert_array_equal(r, table_np[lk])
+            # invariant: decay keeps frequencies finite and non-negative
+            assert (cache.freq >= 0).all() and np.isfinite(cache.freq).all()
+        assert tiered.stats.admitted > 0
+        assert tiered.stats.hit_rate > 0.1  # the cache did real work
+    finally:
+        svc.close()
+
+
 def test_tiered_lookup_handles_all_hot_batch(rng):
     """A batch fully absorbed by the cache must not post any subrequest."""
     specs = (TableSpec("a", 128, nnz=2),)

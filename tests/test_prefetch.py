@@ -1,0 +1,394 @@
+"""repro.prefetch: co-occurrence mining, the Pallas top-k-select kernel vs
+its oracle, piggybacked prefetch through the tiered miss path (result
+invariance + the acceptance win), controller budgeting, and the simulator's
+prefetch model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive_cache import (
+    AdaptiveCacheController,
+    MemoryModel,
+)
+from repro.core.embedding import DisaggEmbedding
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data.synthetic import CooccurrenceWorkload
+from repro.hotcache.miss_path import TieredLookupService
+from repro.hotcache.policy import AdmissionPolicy
+from repro.prefetch import (
+    CooccurrenceMiner,
+    CountMinSketch,
+    PrefetchEngine,
+    PrefetchPolicy,
+    topk_neighbor_select,
+    topk_neighbor_select_ref,
+    topk_select_np,
+)
+from repro.runtime.simulator import LookupSimulator, SimConfig, compare_prefetch
+
+import jax
+
+
+# ------------------------------------------------------------ count-min sketch
+
+
+def test_countmin_never_underestimates(rng):
+    cm = CountMinSketch(width=1 << 10, depth=4)
+    keys = rng.integers(0, 2**50, 500).astype(np.uint64)
+    counts = rng.integers(1, 20, 500)
+    for _ in range(3):  # repeated adds accumulate
+        cm.add(keys, counts)
+    est = cm.query(keys)
+    true = 3 * counts.astype(np.float64)
+    # np.add.at on duplicate keys accumulates, so query >= true always.
+    assert (est >= true - 1e-9).all()
+    # heavy hitter stays accurate despite collisions
+    hh = np.array([12345], np.uint64)
+    cm.add(hh, np.array([1000.0]))
+    assert cm.query(hh)[0] >= 1000.0
+    cm.decay(0.5)
+    assert cm.query(hh)[0] >= 500.0 - 1e-9
+
+
+# ---------------------------------------------------------------------- miner
+
+
+def test_miner_finds_planted_pattern(rng):
+    """A planted always-co-occurring bundle must dominate its members'
+    neighbor lists over zipf noise."""
+    miner = CooccurrenceMiner(list_len=8, max_rows=2048, seed=1)
+    pattern = np.array([70_001, 70_002, 70_003, 70_004])
+    for _ in range(25):
+        B, nnz = 32, 4
+        fused = rng.integers(0, 5_000, (B, 1, nnz))
+        hit = rng.random(B) < 0.4
+        fused[hit, 0, :] = pattern
+        miner.observe(fused, np.ones((B, 1, nnz), bool))
+    nbr, score = miner.neighbors(pattern[:1], 3)
+    assert set(nbr.ravel().tolist()) == set(pattern[1:].tolist())
+    assert (score > 0).all()
+
+
+def test_miner_decay_fades_stale_edges(rng):
+    miner = CooccurrenceMiner(list_len=4, max_rows=256, decay=0.5, seed=2)
+    fused = np.tile(np.array([[[11, 12]]]), (16, 1, 1))
+    miner.observe(fused, np.ones_like(fused, bool))
+    _, s0 = miner.neighbors(np.array([11]), 1)
+    for _ in range(6):
+        miner.decay()
+    _, s1 = miner.neighbors(np.array([11]), 1)
+    assert s1[0, 0] < s0[0, 0] * 0.1
+
+
+def test_miner_bounded_tracking(rng):
+    miner = CooccurrenceMiner(list_len=4, max_rows=64, seed=3)
+    for _ in range(10):
+        fused = rng.integers(0, 100_000, (64, 1, 4))
+        miner.observe(fused, np.ones((64, 1, 4), bool))
+    assert miner.tracked_rows <= 64
+    assert miner._nbr.shape == (64, 4)
+
+
+# ----------------------------------------------------- Pallas kernel vs oracle
+
+
+@pytest.mark.parametrize("M,L,k", [(4, 8, 3), (16, 100, 8), (3, 128, 128), (8, 200, 1)])
+def test_topk_select_kernel_vs_ref(M, L, k, rng):
+    scores = rng.normal(size=(M, L)).astype(np.float32)
+    scores[rng.random((M, L)) < 0.25] = -np.inf  # absent candidates
+    scores[0, : min(4, L)] = 1.5  # exact ties -> index order must decide
+    kv, ki = topk_neighbor_select(jnp.asarray(scores), k, interpret=True)
+    rv, ri = topk_neighbor_select_ref(jnp.asarray(scores), k)
+    nv, ni = topk_select_np(scores, k)
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(rv), nv)
+    np.testing.assert_array_equal(np.asarray(ri), ni)
+
+
+def test_topk_select_rejects_k_too_large():
+    with pytest.raises(ValueError):
+        topk_select_np(np.zeros((2, 4)), 5)
+    with pytest.raises(ValueError):
+        topk_neighbor_select(jnp.zeros((2, 4)), 5, interpret=True)
+
+
+# ------------------------------------------------- tiered piggyback end-to-end
+
+
+def _setup_service(seed=0):
+    specs = (
+        TableSpec("hist", 40_000, nnz=8),
+        TableSpec("item", 10_000, nnz=4),
+    )
+    dim, shards = 32, 4
+    emb = DisaggEmbedding(specs=specs, dim=dim, num_shards=shards)
+    params = emb.init(jax.random.key(seed))
+    tables = make_fused_tables(specs, dim, shards)
+    return specs, emb, params, tables, np.asarray(params["table"])
+
+
+def _serve(tables, table_np, batches, prefetcher, num_slots=4096):
+    svc = HostLookupService(tables, table_np)
+    tiered = TieredLookupService(
+        svc,
+        num_slots=num_slots,
+        policy=AdmissionPolicy(admission_threshold=3.0, max_swap_in=1024),
+        refresh_every=2,
+        prefetcher=prefetcher,
+    )
+    try:
+        outs = [tiered.lookup(b["indices"], b["mask"]) for b in batches]
+    finally:
+        svc.close()
+    return tiered, outs
+
+
+def _default_engine():
+    return PrefetchEngine(
+        CooccurrenceMiner(list_len=16, max_rows=16_384, decay=0.99),
+        PrefetchPolicy(k_neighbors=12, byte_budget=1 << 18, min_score=1.0),
+    )
+
+
+def test_prefetch_result_invariance_bit_equal(rng):
+    """The contract: prefetch changes when bytes move, never what lookups
+    return — pooled outputs are BIT-EQUAL with prefetch on/off, and both
+    match the single-device oracle."""
+    specs, emb, params, tables, table_np = _setup_service()
+    wl = CooccurrenceWorkload(
+        specs, batch=48, alpha=1.03, cooccur_frac=0.7, pool_size=128,
+        drift_every=6, seed=11,
+    )
+    batches = [wl.next_batch() for _ in range(18)]
+    t0, out_base = _serve(tables, table_np, batches, None)
+    t1, out_pf = _serve(tables, table_np, batches, _default_engine())
+    assert t1.stats.prefetch_issued > 0  # the channel actually ran
+    for a, b in zip(out_base, out_pf):
+        np.testing.assert_array_equal(a, b)
+    ref = emb.lookup_reference(
+        params, jnp.asarray(batches[-1]["indices"]),
+        jnp.asarray(batches[-1]["mask"]),
+    )
+    np.testing.assert_allclose(
+        out_pf[-1], np.asarray(ref), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_prefetch_acceptance_hit_rate_and_wire_bytes():
+    """ISSUE acceptance, pinned with slack via the benchmark itself: on the
+    co-occurrence zipf workload, prefetch raises the cache hit rate and cuts
+    miss-path wire bytes vs the demand-only hotcache at equal capacity."""
+    from benchmarks import prefetch_bench
+
+    out = prefetch_bench.run(smoke=True)
+    assert out["bit_equal"], "invariance contract violated"
+    assert out["kernel_matches_ref"]
+    # Observed: hit +0.038, miss-bytes 1.11x; pinned with generous slack.
+    assert out["hit_delta"] >= 0.01, out
+    assert out["miss_bytes_reduction"] >= 1.03, out
+    assert out["prefetch_useful_rate"] >= 0.3, out
+
+
+def test_prefetch_respects_byte_budget(rng):
+    specs, emb, params, tables, table_np = _setup_service()
+    budget = 8 * (4 + 32 * 4)  # room for exactly 8 rows per piggyback
+    engine = PrefetchEngine(
+        CooccurrenceMiner(list_len=16, max_rows=8192, decay=0.99),
+        PrefetchPolicy(k_neighbors=12, byte_budget=budget, min_score=1.0),
+    )
+    wl = CooccurrenceWorkload(
+        specs, batch=48, alpha=1.03, cooccur_frac=0.7, pool_size=128, seed=5,
+    )
+    t, _ = _serve(tables, table_np, [wl.next_batch() for _ in range(16)], engine)
+    s = t.stats
+    refreshes = s.batches // 2
+    assert s.prefetch_issued > 0
+    assert s.bytes_prefetch <= refreshes * budget
+    # attribution is conservative: never more first-touch hits than rows
+    assert s.prefetch_hits <= s.prefetch_issued
+    assert s.prefetch_admitted <= s.prefetch_issued
+
+
+def test_prefetch_flag_attribution_semantics(rng):
+    """HostHashCache prefetch marks: one first-touch credit per row even on
+    multi-bag batches, flag cleared by demand refresh, eviction counted."""
+    from repro.hotcache.miss_path import HostHashCache
+
+    cache = HostHashCache(64, 4, max_probes=4)
+    ids = np.array([5], np.int64)
+    row = np.ones((1, 4), np.float32)
+    assert cache.insert(ids, row, np.array([2.0]), 1.0, prefetched=True) == 1
+    slot, hit = cache.probe(ids)
+    assert hit[0] and cache.prefetched[slot[0]]
+    # demand refresh of a still-marked row clears the mark (no credit due)
+    cache.insert(ids, row, np.array([1.0]), 1.0, prefetched=False)
+    assert not cache.prefetched[slot[0]]
+    # eviction of a still-marked row increments the waste counter
+    from tests.test_hotcache import _colliding_ids
+
+    cids = _colliding_ids(64, 4, 5)
+    rows = rng.normal(size=(5, 4)).astype(np.float32)
+    cache2 = HostHashCache(64, 4, max_probes=4)
+    cache2.insert(cids[:4], rows[:4], np.full(4, 2.0), 1.0, prefetched=True)
+    assert cache2.prefetch_evicted == 0
+    cache2.insert(cids[4:5], rows[4:5], np.array([50.0]), 1.0)
+    assert cache2.prefetch_evicted == 1
+
+
+def test_miner_same_batch_acquisition_not_cannibalized():
+    """A colder newcomer must not evict a hotter newcomer tracked moments
+    earlier in the same observe call (zero-heat shielding)."""
+    miner = CooccurrenceMiner(list_len=4, max_rows=2, seed=0)
+    # one batch introducing two bags: {1,2} seen twice, {8,9} once -> rows
+    # 1,2 are hotter than 8,9; only 2 tracking slots exist.
+    fused = np.array([[[1, 2]], [[1, 2]], [[8, 9]]])
+    miner.observe(fused, np.ones_like(fused, bool))
+    assert miner.tracked_rows == 2
+    tracked = set(int(r) for r in miner._row_ids[:2])
+    assert tracked == {1, 2}, tracked  # the hot pair survived
+
+
+def test_prefetch_zero_budget_is_inert(rng):
+    specs, emb, params, tables, table_np = _setup_service()
+    engine = _default_engine()
+    engine.set_byte_budget(0)
+    wl = CooccurrenceWorkload(
+        specs, batch=32, alpha=1.05, cooccur_frac=0.6, pool_size=64, seed=6,
+    )
+    t, _ = _serve(tables, table_np, [wl.next_batch() for _ in range(8)], engine)
+    assert t.stats.prefetch_issued == 0
+    assert t.stats.bytes_prefetch == 0
+
+
+# --------------------------------------------------------- serving integration
+
+
+def test_serving_reports_prefetch_attribution(rng):
+    """FlexEMRServer with a PrefetchEngine: piggyback rides the plan swap-in,
+    metrics surface issued/hits/bytes, and serving stays correct."""
+    from repro.models import recsys as R
+    from repro.runtime.serving import FlexEMRServer
+
+    tables_spec = (
+        TableSpec("big", 4000, nnz=4),
+        TableSpec("mid", 1000, nnz=2),
+    )
+    cfg = R.RecsysConfig(
+        name="t", arch="dlrm", tables=tables_spec, embed_dim=16, n_dense=13,
+        bottom_mlp=(64, 16), mlp=(64, 32),
+    )
+    params = R.init_params(cfg, jax.random.key(2))
+    tables = make_fused_tables(cfg.tables, cfg.embed_dim, 4)
+    controller = AdaptiveCacheController(
+        cfg.tables, cfg.embed_dim,
+        MemoryModel(fixed_bytes=1 << 20, bytes_per_sample=1 << 10,
+                    hbm_bytes=1 << 28),
+        field_replication=False, max_rows=1024, prefetch_frac=0.5,
+    )
+    engine = PrefetchEngine(
+        CooccurrenceMiner(list_len=8, max_rows=4096, decay=0.99),
+        PrefetchPolicy(k_neighbors=8, byte_budget=1 << 16, min_score=1.0),
+    )
+    server = FlexEMRServer(
+        cfg, params, tables, controller=controller,
+        cache_refresh_every=2, prefetcher=engine,
+    )
+    wl = CooccurrenceWorkload(
+        tables_spec, batch=1, alpha=1.1, cooccur_frac=0.8, pool_size=32,
+        n_dense=13, seed=3,
+    )
+    try:
+        for _ in range(40):
+            b = wl.next_batch()
+            server.submit({"indices": b["indices"][0], "mask": b["mask"][0],
+                           "dense": b["dense"][0]})
+        while server.metrics.requests < 40:
+            out = server.step()
+            if out is not None:
+                assert np.all(np.isfinite(out["scores"]))
+        summ = server.metrics.summary()
+        assert summ["requests"] == 40
+        assert "prefetch_issued" in summ and "prefetch_useful_rate" in summ
+        assert engine.miner.pairs_observed > 0  # the stream was mined
+        assert summ["bytes_prefetch"] == engine.stats.bytes_prefetch
+        assert 0 <= summ["prefetch_hits"] <= max(1, summ["prefetch_issued"]) * 40
+        # serving stays equal to the plain jit forward with prefetch active
+        b = wl.next_batch()
+        jb = {k: jnp.asarray(v) for k, v in b.items()}
+        want = np.asarray(R.forward(cfg, params, jb, None))
+        pooled = server._lookup(b["indices"], b["mask"])
+        got = np.asarray(
+            server._dense(jnp.asarray(pooled), jnp.asarray(b["dense"]))
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    finally:
+        server.close()
+
+
+# ------------------------------------------------------------ controller knob
+
+
+def test_cache_plan_carries_prefetch_budget():
+    specs = [TableSpec("a", 10_000, nnz=4)]
+    mm = MemoryModel(fixed_bytes=1 << 28, bytes_per_sample=1 << 16,
+                     hbm_bytes=1 << 30)
+    ctl = AdaptiveCacheController(specs, dim=32, memory_model=mm,
+                                  prefetch_frac=0.25)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        ctl.observe(256, rng.integers(0, 10_000, 2048))
+    plan = ctl.plan(256)
+    assert plan.prefetch_budget_bytes > 0
+    assert plan.prefetch_budget_bytes <= 0.25 * plan.capacity_rows * 32 * 4 + 1
+    # high load throttles speculation: flood the monitor with huge batches
+    for _ in range(64):
+        ctl.observe(10**6, rng.integers(0, 10_000, 64))
+    hot_plan = ctl.plan(10**6)
+    if hot_plan.capacity_rows:  # budget shrank strictly faster than capacity
+        assert (
+            hot_plan.prefetch_budget_bytes
+            <= plan.prefetch_budget_bytes * max(
+                1, hot_plan.capacity_rows / max(1, plan.capacity_rows)
+            ) / 4 + 1
+        )
+    ctl0 = AdaptiveCacheController(specs, dim=32, memory_model=mm,
+                                   prefetch_frac=0.0)
+    for _ in range(8):
+        ctl0.observe(256, rng.integers(0, 10_000, 2048))
+    assert ctl0.plan(256).prefetch_budget_bytes == 0
+    with pytest.raises(ValueError):
+        AdaptiveCacheController(specs, dim=32, memory_model=mm,
+                                prefetch_frac=1.5)
+
+
+# ------------------------------------------------------------- simulator model
+
+
+def test_sim_prefetch_accuracy_sweep():
+    """Accurate prefetch must beat the demand-only baseline in the
+    byte-bound regime; inaccurate prefetch must cost (pure overhead)."""
+    out = compare_prefetch(
+        n_batches=300, bytes_per_subrequest=524288.0,
+        accuracies=(0.0, 0.5, 0.95),
+    )
+    assert out["speedup_at_best_accuracy"] > 1.1, out
+    assert out["overhead_at_zero_accuracy"] < 1.0, out
+    # monotone in accuracy at fixed budget
+    t = [out[a]["throughput_batches_per_s"] for a in (0.0, 0.5, 0.95)]
+    assert t[0] <= t[1] <= t[2]
+
+
+def test_sim_effective_hit_rate_model():
+    sim = LookupSimulator(SimConfig(
+        cache_hit_rate=0.5, prefetch_accuracy=0.5,
+        prefetch_budget_frac=0.25, prefetch_reuse=2.0,
+    ))
+    # gain = 0.5 * min(1, 0.25*2) * 0.5 = 0.125
+    assert abs(sim.effective_hit_rate() - 0.625) < 1e-12
+    capped = LookupSimulator(SimConfig(
+        cache_hit_rate=0.9, prefetch_accuracy=1.0,
+        prefetch_budget_frac=1.0, prefetch_reuse=10.0,
+    ))
+    assert capped.effective_hit_rate() == 1.0
