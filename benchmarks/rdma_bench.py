@@ -1,0 +1,186 @@
+"""RDMA engine bench: lookup-latency scaling of the §3.2 engine pool.
+
+Four measurements, one per layer of the repro/rdma subsystem:
+
+  1. thread sweep — the SAME zipf lookup stream served by PooledLookupService
+     at 1/2/4 engine threads (fixed traffic, fixed subrequest chunking):
+     virtual p50/p99 lookup latency per thread count, and the headline
+     ``p99_speedup`` from 1 thread to the widest pool (the ISSUE's >=1.5x
+     acceptance quantity).  Pooled outputs are verified bit-equal across
+     every thread count and against the legacy HostLookupService — the
+     engine changes *when subrequests move*, never *what lookups return*.
+  2. fanout sweep — the widest pool at several ``max_rows_per_subrequest``
+     settings.  Over-fine chunks pay per-WR post overhead, so with uniform
+     traffic (shards >= threads already gives the pool parallelism) the
+     coarse end wins; fine chunks earn their cost under skew, where they
+     are the steal granularity — which is measurement 3.
+  3. work stealing — a pathological all-one-shard stream (every subrequest
+     affinity-deals to one engine) with stealing on vs off.
+  4. calibration — runtime.simulator.calibrate_to_engine fits the
+     simulator's t_post to the pool's measured per-thread utilization, so
+     the Fig-8 sweeps extrapolate from the engine we actually run.
+
+``run(smoke=True)`` shrinks every dimension so `benchmarks/run.py --smoke`
+(and the CI entry ``python -m benchmarks.rdma_bench --smoke``) exercises the
+whole path in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data import synthetic as syn
+from repro.rdma import PooledLookupService
+from repro.runtime.simulator import calibrate_to_engine
+
+THREAD_SWEEP = (1, 2, 4)
+CHUNK_SWEEP = (128, 32, 8)
+
+
+def _serve_stream(
+    tables, table_np, batches, threads, chunk=32, work_stealing=True
+):
+    """Run the stream through one pool config; returns (outs, summary, us)."""
+    svc = PooledLookupService(
+        tables,
+        table_np,
+        num_threads=threads,
+        max_rows_per_subrequest=chunk,
+        work_stealing=work_stealing,
+    )
+    t0 = time.perf_counter()
+    try:
+        outs = [svc.lookup(b["indices"], b["mask"]) for b in batches]
+        summary = svc.engine_summary()
+        util = svc.pool.utilization()
+    finally:
+        svc.close()
+    us = (time.perf_counter() - t0) / max(1, len(batches)) * 1e6
+    return outs, summary, util, us
+
+
+def _one_shard_batches(rng, tables, n_batches, batch=64):
+    """Batches whose every valid id lives in shard 0 (field 0, small ids)."""
+    F = len(tables.specs)
+    nnz = max(t.nnz for t in tables.specs)
+    out = []
+    span = min(tables.rows_per_shard, tables.specs[0].vocab)
+    for _ in range(n_batches):
+        idx = rng.integers(0, span, size=(batch, F, nnz)).astype(np.int64)
+        msk = np.zeros((batch, F, nnz), bool)
+        msk[:, 0, :] = True
+        out.append({"indices": idx, "mask": msk})
+    return out
+
+
+def run(seed: int = 0, smoke: bool = False) -> dict:
+    n_batches = 30 if smoke else 120
+    specs = (
+        TableSpec("hist", 60_000, nnz=8),
+        TableSpec("item", 20_000, nnz=4),
+        TableSpec("geo", 5_000, nnz=1, pooling="mean"),
+    )
+    dim, shards = 32, 8
+    tables = make_fused_tables(specs, dim, shards)
+    rng = np.random.default_rng(seed)
+    table_np = (0.05 * rng.normal(size=(tables.total_rows, dim))).astype(
+        np.float32
+    )
+    batches = [syn.recsys_batch(rng, specs, 64) for _ in range(n_batches)]
+
+    # ----------------------------------------------- 1. thread sweep (fixed)
+    legacy = HostLookupService(tables, table_np)
+    try:
+        ref = [legacy.lookup(b["indices"], b["mask"]) for b in batches]
+    finally:
+        legacy.close()
+
+    sweep: dict[int, dict] = {}
+    bit_equal = True
+    util_widest = None
+    us = 0.0
+    for T in THREAD_SWEEP:
+        outs, summary, util, us = _serve_stream(tables, table_np, batches, T)
+        bit_equal &= all(np.array_equal(a, b) for a, b in zip(outs, ref))
+        sweep[T] = summary
+        util_widest = util
+    t_lo, t_hi = THREAD_SWEEP[0], THREAD_SWEEP[-1]
+    p99_speedup = sweep[t_lo]["p99_latency_us"] / max(
+        1e-9, sweep[t_hi]["p99_latency_us"]
+    )
+    p50_speedup = sweep[t_lo]["p50_latency_us"] / max(
+        1e-9, sweep[t_hi]["p50_latency_us"]
+    )
+
+    # ------------------------------------------------------ 2. fanout sweep
+    fanout = {}
+    for chunk in CHUNK_SWEEP:
+        _, summary, _, _ = _serve_stream(
+            tables, table_np, batches[: max(8, n_batches // 3)], t_hi,
+            chunk=chunk,
+        )
+        fanout[chunk] = summary["p99_latency_us"]
+
+    # ------------------------------------------ 3. work-stealing pathological
+    patho = _one_shard_batches(rng, tables, max(8, n_batches // 3))
+    p_out, p_steal, _, _ = _serve_stream(
+        tables, table_np, patho, t_hi, chunk=8, work_stealing=True
+    )
+    n_out, p_nosteal, _, _ = _serve_stream(
+        tables, table_np, patho, t_hi, chunk=8, work_stealing=False
+    )
+    bit_equal &= all(np.array_equal(a, b) for a, b in zip(p_out, n_out))
+    steal_speedup = p_nosteal["p99_latency_us"] / max(
+        1e-9, p_steal["p99_latency_us"]
+    )
+
+    # --------------------------------------------------------- 4. calibration
+    cal = calibrate_to_engine(
+        util_widest,
+        n_batches=150 if smoke else 400,
+        n_engines=t_hi,
+        n_units=t_hi,
+    )
+
+    return {
+        "us_per_call": us,
+        "p50_latency_us": {T: s["p50_latency_us"] for T, s in sweep.items()},
+        "p99_latency_us": {T: s["p99_latency_us"] for T, s in sweep.items()},
+        "p50_speedup": p50_speedup,
+        "p99_speedup": p99_speedup,
+        "bit_equal": bit_equal,
+        "virtual_steals": sweep[t_hi]["virtual_steals"],
+        "fanout_p99_us": fanout,
+        "steal_speedup": steal_speedup,
+        "steal_steals": p_steal["virtual_steals"],
+        "utilization": [float(u) for u in util_widest],
+        "credit_window": sweep[t_hi]["credit_window"],
+        "calibrated_t_post_us": 1e6 * cal["t_post"],
+        "calibration_target_util": cal["target_utilization"],
+        "calibration_achieved_util": cal["achieved_utilization"],
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale configuration (CI entry)")
+    ap.add_argument("--seed", type=int, default=0)
+    opts = ap.parse_args(argv)
+    out = run(seed=opts.seed, smoke=opts.smoke)
+    for k, v in out.items():
+        print(f"{k}: {v}")
+    if not out["bit_equal"]:
+        raise SystemExit("result-invariance VIOLATED across engine configs")
+    if out["p99_speedup"] < 1.5:
+        raise SystemExit(
+            f"p99 scaling regressed: {out['p99_speedup']:.2f}x < 1.5x"
+        )
+
+
+if __name__ == "__main__":
+    main()

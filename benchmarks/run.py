@@ -6,9 +6,10 @@ quantity), then the full §Roofline table assembled from the dry-run artifacts.
   PYTHONPATH=src python -m benchmarks.run            # full sweep
   PYTHONPATH=src python -m benchmarks.run --smoke    # seconds-scale subset
 
-``--smoke`` runs the fast regression subset (currently the hotcache bench in
-its shrunk configuration) so cache-path regressions show up in the bench
-trajectory without paying for the full figure sweep.
+``--smoke`` runs the fast regression subset — the hotcache, prefetch, and
+rdma benches in their shrunk configurations — so cache-, prefetch-, and
+engine-path regressions show up in the bench trajectory without paying for
+the full figure sweep.
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ import traceback
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="fast regression subset (hotcache bench only)")
+                    help="fast regression subset (hotcache/prefetch/rdma)")
     opts = ap.parse_args(argv)
     rows = []
 
@@ -37,7 +38,7 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
 
-    from benchmarks import hotcache_bench, prefetch_bench
+    from benchmarks import hotcache_bench, prefetch_bench, rdma_bench
 
     hotcache_derive = lambda o: (  # noqa: E731
         f"bytes_reduction={o['bytes_reduction']:.2f}x "
@@ -51,6 +52,12 @@ def main(argv=None) -> None:
         f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
         f"kernel={'ok' if o['kernel_matches_ref'] else 'MISMATCH'}"
     )
+    rdma_derive = lambda o: (  # noqa: E731
+        f"p99_speedup={o['p99_speedup']:.2f}x "
+        f"steal={o['steal_speedup']:.2f}x "
+        f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
+        f"calib_t_post={o['calibrated_t_post_us']:.2f}us"
+    )
 
     if opts.smoke:
         bench(
@@ -62,6 +69,11 @@ def main(argv=None) -> None:
             "prefetch_smoke",
             lambda: prefetch_bench.run(smoke=True),
             prefetch_derive,
+        )
+        bench(
+            "rdma_smoke",
+            lambda: rdma_bench.run(smoke=True),
+            rdma_derive,
         )
         failed = [r for r in rows if r[2] == "FAILED"]
         if failed:
@@ -113,6 +125,7 @@ def main(argv=None) -> None:
     )
     bench("hotcache", hotcache_bench.run, hotcache_derive)
     bench("prefetch", prefetch_bench.run, prefetch_derive)
+    bench("rdma", rdma_bench.run, rdma_derive)
 
     print()
     try:

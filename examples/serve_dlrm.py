@@ -1,10 +1,11 @@
 """End-to-end serving example: the full FlexEMR pipeline over a diurnal
-request trace — bucketed batching, multi-threaded host lookup engines with
-pooling pushdown, the adaptive cache controller, straggler hedging, and the
-jit'd dense ranker.
+request trace — bucketed batching, the §3.2 multi-threaded rdma engine pool
+with pooling pushdown, the adaptive cache controller, straggler hedging, and
+the jit'd dense ranker.
 
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000
-  PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --no-pushdown  # fig-4a ablation
+  PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --no-pushdown    # fig-4a ablation
+  PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --engine legacy  # pre-pool engine
 """
 import os
 import sys

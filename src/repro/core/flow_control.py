@@ -8,7 +8,9 @@ higher-QoS channel so the server learns about freed queue slots immediately.
 
 This module is the executable model used by the serving runtime and by the
 Fig-8(right) benchmark: `CreditedConnection` with `priority_credits=False`
-reproduces the strawman, `True` the FlexEMR fast path.  The SPMD counterpart
+reproduces the strawman, `True` the FlexEMR fast path.  `CreditGate` is the
+*live* (thread-safe) form of the same window, enforcing the bounded
+in-flight budget inside the repro.rdma engine pool.  The SPMD counterpart
 (chunk quotas on collectives) lives in the lookup schedule itself.
 """
 from __future__ import annotations
@@ -16,7 +18,75 @@ from __future__ import annotations
 import collections
 import dataclasses
 import heapq
+import threading
 from typing import Iterable
+
+
+class CreditGate:
+    """Thread-safe bounded in-flight window — the live form of the credit
+    scheme above, used by ``repro.rdma.RdmaEnginePool`` to cap outstanding
+    lookup subrequests.
+
+    Each posted subrequest consumes a credit; its completion returns it.
+    ``acquire`` blocks the posting engine thread when the window is full,
+    which is exactly the back-pressure the §3.2 credit loop applies to the
+    embedding server.  The gate records how often posts stalled
+    (``stalls``) and the peak window occupancy (``peak``) so the serving
+    metrics can show whether the window, the wire, or the engines bound a
+    run.  ``CreditedConnection`` stays the discrete-time model of the same
+    mechanism (it prices *when* a credit comes back); the gate enforces
+    *that* it must.
+    """
+
+    def __init__(self, max_credits: int = 64):
+        if max_credits <= 0:
+            raise ValueError("max_credits must be positive")
+        self.max_credits = max_credits
+        self._inflight = 0
+        self._cond = threading.Condition()
+        self.stalls = 0  # acquire() calls that had to wait
+        self.peak = 0  # max simultaneous in-flight observed
+
+    def acquire(self, n: int = 1, timeout: float | None = None) -> bool:
+        """Take ``n`` credits, blocking while the window is full.
+
+        ``n`` is clamp-checked against the window size (an acquire larger
+        than the window would deadlock).  Returns False on timeout.
+        """
+        if n > self.max_credits:
+            raise ValueError(
+                f"acquire({n}) exceeds the credit window ({self.max_credits})"
+            )
+        with self._cond:
+            if self._inflight + n > self.max_credits:
+                self.stalls += 1
+            ok = self._cond.wait_for(
+                lambda: self._inflight + n <= self.max_credits, timeout
+            )
+            if not ok:
+                return False
+            self._inflight += n
+            self.peak = max(self.peak, self._inflight)
+            return True
+
+    def release(self, n: int = 1) -> None:
+        with self._cond:
+            if n > self._inflight:
+                raise RuntimeError("credit released without a matching acquire")
+            self._inflight -= n
+            self._cond.notify_all()
+
+    @property
+    def inflight(self) -> int:
+        with self._cond:
+            return self._inflight
+
+    def summary(self) -> dict:
+        return {
+            "max_credits": self.max_credits,
+            "stalls": self.stalls,
+            "peak": self.peak,
+        }
 
 
 @dataclasses.dataclass(order=True)

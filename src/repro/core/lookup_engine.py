@@ -161,14 +161,7 @@ class HostLookupService:
         mapping_aware: bool = True,
         pushdown: bool = True,
     ):
-        self.tables = tables
-        self.router = RangeRouter(tables)
-        self.pushdown = pushdown
-        rps = tables.rows_per_shard
-        self.servers = [
-            EmbeddingServer(s, s * rps, table_array[s * rps : (s + 1) * rps])
-            for s in range(tables.num_shards)
-        ]
+        self._init_core(tables, table_array, pushdown)
         num_units = num_units or num_engines
         self.units = [threading.Lock() for _ in range(num_units)]
         # RNIC behaviour: units round-robin over connections at creation.
@@ -193,11 +186,63 @@ class HostLookupService:
         for e in self.engines:
             e.start()
 
+    def _init_core(
+        self, tables: FusedTables, table_array: np.ndarray, pushdown: bool
+    ) -> None:
+        """State shared by every engine implementation (legacy + rdma pool):
+        the fused-table layout, the range router, and the DRAM shards."""
+        self.tables = tables
+        self.router = RangeRouter(tables)
+        self.pushdown = pushdown
+        rps = tables.rows_per_shard
+        self.servers = [
+            EmbeddingServer(s, s * rps, table_array[s * rps : (s + 1) * rps])
+            for s in range(tables.num_shards)
+        ]
+
     def close(self) -> None:
         for e in self.engines:
             e.stop()
         for e in self.engines:
             e.join(timeout=1.0)
+
+    def _plan_fanout(
+        self, indices: np.ndarray, mask: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int, int]:
+        """Flatten one [B,F,nnz] batch into the per-server fan-out plan.
+
+        Returns ``(fused, bag, bounds, num_bags, D)`` with the valid
+        (fused id, bag id) pairs sorted stably by owning shard;
+        ``bounds[s]:bounds[s+1]`` is shard ``s``'s contiguous span.  Both
+        the legacy engine and the rdma pool shard from this exact plan, so
+        their merge order — and therefore their pooled bits — agree.
+        """
+        B, F, NNZ = indices.shape
+        offs = self.tables.field_offsets_array()
+        fused = (indices.astype(np.int64) + offs[None, :, None]).ravel()
+        bag = np.broadcast_to(
+            np.arange(B * F).reshape(B, F, 1), (B, F, NNZ)
+        ).ravel()
+        valid = mask.ravel()
+        fused, bag = fused[valid], bag[valid]
+        shard = self.router.shard_of(fused)
+        order = np.argsort(shard, kind="stable")
+        fused, bag, shard = fused[order], bag[order], shard[order]
+        bounds = np.searchsorted(shard, np.arange(self.tables.num_shards + 1))
+        return fused, bag, bounds, B * F, self.servers[0].rows.shape[1]
+
+    def _finalize(
+        self, out: np.ndarray, mask: np.ndarray, mean_normalize: bool
+    ) -> np.ndarray:
+        """Shared tail: mean-field normalization over FULL validity counts."""
+        if not mean_normalize:
+            return out  # f64 raw sums: exact merge with the cache tier
+        counts = mask.sum(-1).astype(np.float64)
+        mean_mask = np.asarray([s.pooling == "mean" for s in self.tables.specs])
+        denom = np.maximum(counts, 1.0)[..., None]
+        return np.where(
+            mean_mask[None, :, None], out / denom, out
+        ).astype(np.float32)
 
     def lookup(
         self,
@@ -212,21 +257,8 @@ class HostLookupService:
         another tier (the hotcache miss path) must normalize mean fields
         once at the end, over the full validity counts.
         """
-        B, F, NNZ = indices.shape
-        offs = self.tables.field_offsets_array()
-        fused = (indices.astype(np.int64) + offs[None, :, None]).ravel()
-        bag = np.broadcast_to(
-            np.arange(B * F).reshape(B, F, 1), (B, F, NNZ)
-        ).ravel()
-        valid = mask.ravel()
-        fused, bag = fused[valid], bag[valid]
-        shard = self.router.shard_of(fused)
-        num_bags = B * F
-        D = self.servers[0].rows.shape[1]
-
-        order = np.argsort(shard, kind="stable")
-        fused, bag, shard = fused[order], bag[order], shard[order]
-        bounds = np.searchsorted(shard, np.arange(self.tables.num_shards + 1))
+        B, F, _ = indices.shape
+        fused, bag, bounds, num_bags, D = self._plan_fanout(indices, mask)
 
         reqs: list[Subrequest] = []
         results: list = [None] * self.tables.num_shards
@@ -260,15 +292,7 @@ class HostLookupService:
                 rows, bags = res  # ranker-side pooling (fig 4a)
                 np.add.at(out, bags, rows)
         # Mean-pool fields divide by their valid counts.
-        out = out.reshape(B, F, D)
-        if not mean_normalize:
-            return out  # f64 raw sums: exact merge with the cache tier
-        counts = mask.sum(-1).astype(np.float64)
-        mean_mask = np.asarray([s.pooling == "mean" for s in self.tables.specs])
-        denom = np.maximum(counts, 1.0)[..., None]
-        return np.where(
-            mean_mask[None, :, None], out / denom, out
-        ).astype(np.float32)
+        return self._finalize(out.reshape(B, F, D), mask, mean_normalize)
 
     def gather_rows(self, row_ids: np.ndarray) -> np.ndarray:
         """Raw rows by fused id — the hotcache swap-in fetch (off the serving

@@ -1,27 +1,40 @@
 """Tiered miss path: cache-first lookup with misses batched to the servers.
 
+Paper anchor: §3.1.1 — "shrink the lookup": a hot-row cache in front of the
+disaggregated embedding servers so wire bytes scale with the *miss* rate,
+not the request rate.  This module is the host-side half of the pillar; the
+device-resident half (HashCacheState + Pallas kernels) lives in table.py /
+kernels.py.
+
 ``HostHashCache`` is the host-side mirror of table.HashCacheState — same
 open-addressing layout, same hash/probe geometry (table.hash_slots_np), in
 numpy — the form the serving runtime (which lives outside jit) consumes.
 
-``TieredLookupService`` stacks it in front of a core.lookup_engine
-.HostLookupService:
+``TieredLookupService`` stacks it in front of a host lookup service (the
+legacy ``core.lookup_engine.HostLookupService`` or the §3.2
+``repro.rdma.PooledLookupService`` — the serving runtime defaults to the
+latter, so tier-1 subrequests ride the multi-threaded rdma engine pool):
 
   tier 0  hash-cache probe       — hits resolve locally, zero network bytes
   tier 1  miss subrequests       — ONLY cache misses are fanned out to the
-                                   embedding servers (the paper's "shrink the
-                                   lookup" §3.1.1: bytes scale with the miss
-                                   rate, not the request rate)
+                                   embedding servers, through the engine the
+                                   injected service wraps
   refresh LFU swap-in            — decayed miss counters admit rows past the
                                    admission threshold (policy.py); swap-in
                                    fetch bytes are tracked separately
 
-Mean-pooled fields are normalized once at the end over the FULL validity
-counts, so splitting a bag between cache hits and server misses is exact.
-All tier merging accumulates in float64 over the (exactly representable)
-float32 rows, so *where* a row is served from — cache, wire, or prefetch —
-does not perturb the pooled result: the repro.prefetch result-invariance
-contract rests on this.
+Invariants:
+  * Result invariance (bit-equal): all tier merging accumulates in float64
+    over the (exactly representable) float32 rows, so *where* a row is
+    served from — cache, wire, or prefetch, and on whichever engine thread —
+    does not perturb the pooled result.  The repro.prefetch and repro.rdma
+    invariance contracts both rest on this.
+  * Mean-pooled fields are normalized exactly once, at the end, over the
+    FULL validity counts, so splitting a bag between cache hits and server
+    misses is exact.
+  * Byte accounting is conserved: bytes_saved is defined as bytes_no_cache
+    - bytes_network - bytes_swap_in - bytes_prefetch, so every wire byte is
+    attributed to exactly one channel (miss, swap-in, or speculation).
 
 When a ``repro.prefetch.PrefetchEngine`` is attached, the tier also becomes
 the spatial-locality prefetch channel (§3.1.2): every lookup feeds the

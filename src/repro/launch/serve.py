@@ -2,9 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --requests 2000
 
-Exercises the full §3 pipeline: bucketed batching, multi-threaded host lookup
-engines with pooling pushdown, the adaptive cache controller resizing against
-the load trace, hedged stragglers, and the jit'd dense ranker stage.
+Exercises the full §3 pipeline: bucketed batching, the §3.2 rdma engine pool
+(``--engine legacy`` for the pre-pool per-connection threads) with pooling
+pushdown, the adaptive cache controller resizing against the load trace,
+hedged stragglers, and the jit'd dense ranker stage.  The summary includes
+the pool's virtual p50/p99, per-thread utilization, steal counts, and credit
+window under ``rdma_engine``.
 """
 from __future__ import annotations
 
@@ -60,6 +63,7 @@ def run(args) -> dict:
     server = FlexEMRServer(
         cfg, params, tables, controller=controller,
         num_engines=args.num_engines, pushdown=not args.no_pushdown,
+        engine=args.engine,
     )
     try:
         sizes = syn.diurnal_batches(rng, args.requests // 8, base=8, peak=64)
@@ -88,6 +92,9 @@ def run(args) -> dict:
         wall = time.time() - t0
         out = server.metrics.summary()
         out["throughput_rps"] = submitted / wall
+        eng = server.engine_summary()
+        if eng is not None:
+            out["rdma_engine"] = eng
         logger.info("serve summary: %s", json.dumps(out, indent=1))
         return out
     finally:
@@ -98,7 +105,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=1000)
     ap.add_argument("--num-servers", type=int, default=8)
-    ap.add_argument("--num-engines", type=int, default=4)
+    ap.add_argument("--num-engines", type=int, default=4,
+                    help="engine-pool threads (pooled) / I/O threads (legacy)")
+    ap.add_argument("--engine", choices=("pooled", "legacy"), default="pooled",
+                    help="§3.2 rdma engine pool (default) or the legacy "
+                    "per-connection RdmaEngine threads")
     ap.add_argument("--cache-rows", type=int, default=65536)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--no-pushdown", action="store_true")

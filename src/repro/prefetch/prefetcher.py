@@ -1,21 +1,32 @@
-"""Piggybacked spatial prefetch over the hotcache swap-in channel (§3.1.2).
+"""Piggybacked spatial prefetch over the hotcache swap-in channel.
 
-The hotcache's demand path already pays for a `HostLookupService.gather_rows`
-round trip every refresh.  The prefetcher rides that channel: for each row
-being swapped in, it asks the co-occurrence miner for the row's strongest
-partners and appends them to the same fetch, under a hard byte budget the
-controller sets per plan (the swap-in channel is shared with misses, so
-piggyback traffic must be bounded and must shrink under load).
+Paper anchor: §3.1.2 — spatial locality: rows that co-occur in lookups are
+fetched together, so one demand swap-in pre-warms the cache for its likely
+companions before they individually miss.
 
-Prefetched rows do not bypass the cache's discipline: they enter through the
-same LFU `HostHashCache.insert` rules, with their (discounted) co-occurrence
-score as the admission evidence — an inaccurate prefetch loses the slot
-auction to genuinely hot incumbents instead of polluting the cache.
+The hotcache's demand path already pays for a host-service ``gather_rows``
+round trip every refresh (legacy HostLookupService or the §3.2 rdma-pooled
+service — the prefetcher is engine-agnostic).  The prefetcher rides that
+channel: for each row being swapped in, it asks the co-occurrence miner for
+the row's strongest partners and appends them to the same fetch, under a
+hard byte budget the controller sets per plan (the swap-in channel is
+shared with misses, so piggyback traffic must be bounded and must shrink
+under load).
 
-Invariant (the subsystem's contract): prefetch changes *when bytes move*,
-never *what lookups return* — fetched rows are bit-identical to the
-authoritative shard rows, so any lookup result is unchanged whether a row
-arrived by demand swap-in, by piggyback, or over the wire.
+Invariants:
+  * Result invariance (bit-equal): prefetch changes *when bytes move*,
+    never *what lookups return* — fetched rows are bit-identical to the
+    authoritative shard rows, so any pooled result is unchanged whether a
+    row arrived by demand swap-in, by piggyback, or over the wire
+    (asserted in tests/test_prefetch.py and benchmarks/prefetch_bench.py).
+  * Cache discipline: prefetched rows do not bypass admission — they enter
+    through the same LFU ``HostHashCache.insert`` rules, with their
+    (discounted) co-occurrence score as the admission evidence, so an
+    inaccurate prefetch loses the slot auction to genuinely hot incumbents
+    instead of polluting the cache.
+  * Bounded speculation: piggybacked bytes never exceed the policy's byte
+    budget per refresh, and candidates that cannot clear the admission
+    floor are dropped *before* spending wire bytes.
 """
 from __future__ import annotations
 

@@ -1,0 +1,32 @@
+"""repro.rdma — multi-threaded RDMA lookup engine (paper §3.2).
+
+The third pillar of FlexEMR, next to the hotcache (§3.1.1, repro.hotcache)
+and the co-occurrence prefetch (§3.1.2, repro.prefetch): batched miss-path
+requests are sharded into per-shard subrequests and executed concurrently by
+a pool of engine threads with per-thread queue pairs, work-stealing,
+doorbell/completion batching, and a credit-bounded in-flight window.
+
+Layers (see each module's docstring for the paper anchor and invariants):
+
+  verbs.py    simulated verbs timing + deterministic schedule planner
+  engine.py   RdmaEnginePool: real engine threads + the virtual timing layer
+  service.py  PooledLookupService: drop-in HostLookupService on the pool
+"""
+from repro.rdma.engine import BatchHandle, RdmaEnginePool
+from repro.rdma.service import PooledLookupService
+from repro.rdma.verbs import (
+    LookupSubrequest,
+    SchedulePlan,
+    VerbsTiming,
+    plan_schedule,
+)
+
+__all__ = [
+    "BatchHandle",
+    "LookupSubrequest",
+    "PooledLookupService",
+    "RdmaEnginePool",
+    "SchedulePlan",
+    "VerbsTiming",
+    "plan_schedule",
+]

@@ -1,0 +1,295 @@
+"""Multi-threaded RDMA lookup engine pool (paper §3.2).
+
+Paper anchor: §3.2 — the optimized multi-threaded engine that executes the
+concurrent lookup subrequests of one batched miss-path request.
+
+``RdmaEnginePool`` runs two coupled layers:
+
+  * **Real execution.**  ``num_threads`` daemon threads each own a deque of
+    work requests and a private QP per embedding server.  A thread drains
+    its own deque from the head in doorbell-sized groups; when empty it
+    steals from the *tail* of the longest sibling deque (work-stealing), so
+    a pathological all-one-shard batch still spreads across the pool.  The
+    numpy gather/pool against the DRAM shard — the embedding server's work —
+    is executed here, concurrently, for real.  Outstanding work requests are
+    bounded by a ``core.flow_control.CreditGate`` (the §3.2 credit window):
+    a thread must hold one credit per WR in its doorbell group before
+    posting.
+  * **Virtual timing.**  Each ``submit`` first runs
+    ``verbs.plan_schedule`` — the deterministic discrete-event model of the
+    same dealing/stealing policy — which prices doorbells, WQE posts, QP
+    wire serialization, server time, and credit-window waits, and stamps
+    per-WR completion times.  Batch latency (p50/p99) and per-thread
+    utilization come from this layer, so they are reproducible and usable to
+    calibrate ``runtime.simulator`` (``calibrate_to_engine``).
+
+Invariants:
+  * Every submitted work request is executed exactly once, by exactly one
+    thread, and its result lands in its issue-order slot; callers merge in
+    slot order, so results are independent of scheduling (bit-equal across
+    thread counts, stealing, and shutdown timing).  A WR whose execution
+    raises still resolves its batch: the handle records the first failure
+    and ``wait()`` re-raises it — batches fail loudly, never hang, and the
+    engine threads survive.
+  * ``close()`` drains: work in flight at shutdown is completed, its batch
+    handles resolve, and only then do the threads exit (clean shutdown —
+    never dropped or double-executed subrequests).
+  * ``num_threads=1, work_stealing=False, doorbell_batch=1`` degenerates to
+    the legacy single-queue ``core.lookup_engine.RdmaEngine`` behaviour: one
+    engine configuration, not a separate code path.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.flow_control import CreditGate
+from repro.rdma.verbs import (
+    LookupSubrequest,
+    SchedulePlan,
+    VerbsTiming,
+    plan_schedule,
+)
+
+
+class BatchHandle:
+    """Completion handle of one submitted batch of subrequests."""
+
+    def __init__(self, n: int, virtual_latency: float):
+        self.results: list = [None] * n
+        self.virtual_latency = virtual_latency
+        self.error: Exception | None = None  # first per-WR failure
+        self._remaining = n
+        self._lock = threading.Lock()
+        self._done = threading.Event()
+        if n == 0:
+            self._done.set()
+
+    def _complete_one(self) -> None:
+        with self._lock:
+            self._remaining -= 1
+            if self._remaining == 0:
+                self._done.set()
+
+    def _fail(self, exc: Exception) -> None:
+        with self._lock:
+            if self.error is None:
+                self.error = exc
+
+    def wait(self, timeout: float | None = None) -> list:
+        """Results in slot order; re-raises the first subrequest failure.
+
+        A failed WR still counts down (its slot stays None), so a bad batch
+        resolves with an exception instead of hanging the caller, and the
+        engine threads survive to serve the next batch."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("lookup batch did not complete in time")
+        if self.error is not None:
+            raise self.error
+        return self.results
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+
+class _EngineThread(threading.Thread):
+    """One engine: drains its own deque, steals from siblings when idle."""
+
+    def __init__(self, pool: "RdmaEnginePool", tid: int):
+        super().__init__(daemon=True, name=f"rdma-pool-{tid}")
+        self.pool = pool
+        self.tid = tid
+        self.deque: collections.deque = collections.deque()
+        self.executed = 0
+        self.stolen = 0  # WRs this thread stole (real layer)
+
+    # All deque access happens under pool._cond's lock.
+
+    def _take_group(self):
+        pool = self.pool
+        if self.deque:
+            n = min(len(self.deque), pool.doorbell_batch)
+            return [self.deque.popleft() for _ in range(n)]
+        if pool.work_stealing:
+            victim = max(
+                (t for t in pool.threads if t is not self),
+                key=lambda t: len(t.deque),
+                default=None,
+            )
+            if victim is not None and victim.deque:
+                n = max(
+                    1, min(len(victim.deque) // 2, pool.doorbell_batch)
+                )
+                group = [victim.deque.pop() for _ in range(n)]
+                group.reverse()
+                self.stolen += len(group)
+                return group
+        return None
+
+    def run(self) -> None:
+        pool = self.pool
+        while True:
+            with pool._cond:
+                group = self._take_group()
+                while group is None:
+                    if pool._stopping:
+                        return
+                    pool._cond.wait(timeout=0.05)
+                    group = self._take_group()
+            # Post the doorbell group under the credit window, outside the
+            # pool lock: credits are returned by this same thread after the
+            # group completes, so the window can never deadlock the pool.
+            pool.gate.acquire(len(group))
+            try:
+                for wr, handle in group:
+                    self._execute(wr, handle)
+            finally:
+                pool.gate.release(len(group))
+
+    def _execute(self, wr: LookupSubrequest, handle: BatchHandle) -> None:
+        try:
+            srv = self.pool.servers[wr.server]
+            if wr.pushdown:
+                res = srv.lookup_pooled(wr.row_ids, wr.bag_ids, wr.num_bags)
+            else:
+                res = (srv.lookup_rows(wr.row_ids), wr.bag_ids)
+            handle.results[wr.slot] = res
+        except Exception as exc:  # a bad WR must not kill the engine thread
+            handle._fail(exc)
+        finally:
+            self.executed += 1
+            handle._complete_one()
+
+
+class RdmaEnginePool:
+    """Pool of engine threads executing lookup subrequests (§3.2)."""
+
+    def __init__(
+        self,
+        servers: Sequence,
+        num_threads: int = 4,
+        timing: VerbsTiming | None = None,
+        doorbell_batch: int = 8,
+        max_inflight: int = 32,
+        work_stealing: bool = True,
+        gate: CreditGate | None = None,
+    ):
+        if num_threads <= 0:
+            raise ValueError("num_threads must be positive")
+        self.servers = list(servers)
+        self.num_threads = num_threads
+        self.timing = timing or VerbsTiming()
+        self.max_inflight = max_inflight
+        self.work_stealing = work_stealing
+        self.gate = gate or CreditGate(max_inflight)
+        # A doorbell group larger than the credit window would deadlock its
+        # own acquire; clamp (mirrors real engines sizing SQ depth to credits).
+        self.doorbell_batch = max(
+            1, min(doorbell_batch, max_inflight, self.gate.max_credits)
+        )
+        self._cond = threading.Condition()
+        self._stopping = False
+        self._closed = False
+        self._submit_lock = threading.Lock()
+        # Virtual-layer accounting (deterministic, from plan_schedule).
+        # Latencies keep a bounded recent window so a long-running server
+        # neither grows without bound nor reports lifetime-global p99s.
+        self.virtual_latencies: collections.deque[float] = collections.deque(
+            maxlen=8192
+        )
+        self.virtual_busy = np.zeros(num_threads)
+        self.virtual_span = 0.0
+        self.virtual_steals = 0
+        self.doorbells = 0
+        self.batches = 0
+        self.subrequests = 0
+        self.threads = [_EngineThread(self, t) for t in range(num_threads)]
+        for t in self.threads:
+            t.start()
+
+    # ----------------------------------------------------------------- submit
+
+    def submit(self, subreqs: list[LookupSubrequest]) -> BatchHandle:
+        """Schedule (virtual) and dispatch (real) one batch of subrequests.
+
+        Thread-safe; returns immediately with a ``BatchHandle``.
+        """
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("submit() on a closed RdmaEnginePool")
+            plan = plan_schedule(
+                subreqs,
+                self.num_threads,
+                self.timing,
+                doorbell_batch=self.doorbell_batch,
+                max_inflight=self.max_inflight,
+                work_stealing=self.work_stealing,
+            )
+            handle = BatchHandle(len(subreqs), plan.makespan)
+            self.batches += 1
+            self.subrequests += len(subreqs)
+            self.virtual_latencies.append(plan.makespan)
+            self.virtual_busy += np.asarray(plan.busy)
+            self.virtual_span += plan.makespan
+            self.virtual_steals += plan.steals
+            self.doorbells += plan.doorbells
+            if subreqs:
+                with self._cond:
+                    # Real dispatch follows the virtual assignment (affinity
+                    # + deterministic steals); threads that finish their
+                    # share early still steal the stragglers in real time.
+                    for tid, wrs in enumerate(plan.assignments):
+                        self.threads[tid].deque.extend(
+                            (wr, handle) for wr in wrs
+                        )
+                    self._cond.notify_all()
+        return handle
+
+    def execute(self, subreqs: list[LookupSubrequest]) -> tuple[list, float]:
+        """Blocking submit: returns (results in slot order, virtual latency)."""
+        handle = self.submit(subreqs)
+        return handle.wait(), handle.virtual_latency
+
+    # ------------------------------------------------------------------ stats
+
+    def utilization(self) -> np.ndarray:
+        """Per-thread posting occupancy over total virtual span [0, 1]."""
+        return self.virtual_busy / max(self.virtual_span, 1e-12)
+
+    def latency_percentiles(self, qs=(50.0, 99.0)) -> dict[float, float]:
+        lat = np.asarray(self.virtual_latencies or [0.0])
+        return {q: float(np.percentile(lat, q)) for q in qs}
+
+    def summary(self) -> dict:
+        pct = self.latency_percentiles()
+        return {
+            "num_threads": self.num_threads,
+            "batches": self.batches,
+            "subrequests": self.subrequests,
+            "doorbells": self.doorbells,
+            "virtual_steals": self.virtual_steals,
+            "real_steals": sum(t.stolen for t in self.threads),
+            "executed": [t.executed for t in self.threads],
+            "utilization": self.utilization().tolist(),
+            "p50_latency_us": 1e6 * pct[50.0],
+            "p99_latency_us": 1e6 * pct[99.0],
+            "credit_window": self.gate.summary(),
+        }
+
+    # ------------------------------------------------------------------ close
+
+    def close(self) -> None:
+        """Drain and join: in-flight subrequests complete, then threads exit.
+
+        Idempotent; after close, ``submit`` raises."""
+        with self._submit_lock:
+            self._closed = True
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        for t in self.threads:
+            t.join(timeout=5.0)

@@ -1,0 +1,152 @@
+"""Pooled host lookup service: the §3.2 engine behind the miss path.
+
+Paper anchor: §3.2 — concurrent lookup subrequests over the multi-threaded
+RDMA engine.  ``PooledLookupService`` is a drop-in for
+``core.lookup_engine.HostLookupService`` (same ``lookup`` / ``gather_rows``
+/ ``network_bytes`` / ``close`` surface, same fan-out plan, same DRAM
+shards) whose fan-out executes on a ``repro.rdma.RdmaEnginePool`` instead of
+the legacy per-connection engine threads:
+
+  * each shard's span of the fan-out plan is cut into subrequests of at most
+    ``max_rows_per_subrequest`` rows — the *subrequest fanout* that gives the
+    pool parallelism to exploit even when one shard dominates a batch;
+  * subrequests are dispatched across the engine threads (per-thread QPs,
+    work-stealing, doorbell batching, credit window — see repro.rdma.engine);
+  * partial results are merged **in subrequest issue order**, in float64 over
+    exactly-representable float32 rows.
+
+Invariants:
+  * Result invariance: pooled outputs are bit-equal to the legacy
+    ``HostLookupService`` and across every pool configuration (thread count,
+    chunk size, stealing on/off).  The engine changes *when subrequests
+    move*, never *what lookups return* — the same contract the hotcache and
+    prefetch tiers (repro.hotcache / repro.prefetch) are built on, and it
+    rests on the same precondition: per-bag sums of f32 rows must be exact
+    in the f64 accumulator (true while a bag's values span < ~29 binades,
+    as embedding tables do; values engineered to straddle >53 bits of
+    exponent could differ in the last ulp across chunk boundaries, exactly
+    as they already could across the cache/wire split).
+  * ``network_bytes`` keeps pricing the per-(server, bag) partials of Fig 4
+    so cache/prefetch A/Bs stay comparable across engines; the verbs timing
+    model prices the finer per-subrequest partials it actually moves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.flow_control import CreditGate
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import FusedTables
+from repro.rdma.engine import RdmaEnginePool
+from repro.rdma.verbs import LookupSubrequest, VerbsTiming
+
+
+class PooledLookupService(HostLookupService):
+    """HostLookupService whose fan-out runs on the rdma engine pool."""
+
+    def __init__(
+        self,
+        tables: FusedTables,
+        table_array: np.ndarray,
+        num_threads: int = 4,
+        pushdown: bool = True,
+        timing: VerbsTiming | None = None,
+        doorbell_batch: int = 8,
+        max_inflight: int = 32,
+        work_stealing: bool = True,
+        max_rows_per_subrequest: int = 64,
+        gate: CreditGate | None = None,
+    ):
+        self._init_core(tables, table_array, pushdown)
+        if max_rows_per_subrequest <= 0:
+            raise ValueError("max_rows_per_subrequest must be positive")
+        self.max_rows_per_subrequest = max_rows_per_subrequest
+        self.pool = RdmaEnginePool(
+            self.servers,
+            num_threads=num_threads,
+            timing=timing,
+            doorbell_batch=doorbell_batch,
+            max_inflight=max_inflight,
+            work_stealing=work_stealing,
+            gate=gate,
+        )
+
+    # ----------------------------------------------------------------- lookup
+
+    def _shard_subrequests(
+        self,
+        fused: np.ndarray,
+        bag: np.ndarray,
+        bounds: np.ndarray,
+        num_bags: int,
+        entry_bytes: int,
+    ) -> list[LookupSubrequest]:
+        """Cut the sorted fan-out plan into per-shard, chunk-sized WRs."""
+        chunk = self.max_rows_per_subrequest
+        subreqs: list[LookupSubrequest] = []
+        for s in range(self.tables.num_shards):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            for c0 in range(lo, hi, chunk):
+                c1 = min(hi, c0 + chunk)
+                bids = bag[c0:c1]
+                if self.pushdown:
+                    # one <bag, partial> entry per distinct bag in the chunk
+                    rbytes = len(np.unique(bids)) * entry_bytes
+                else:
+                    rbytes = (c1 - c0) * entry_bytes
+                subreqs.append(
+                    LookupSubrequest(
+                        server=s,
+                        row_ids=fused[c0:c1],
+                        bag_ids=bids,
+                        num_bags=num_bags,
+                        pushdown=self.pushdown,
+                        response_bytes=rbytes,
+                        slot=len(subreqs),
+                    )
+                )
+        return subreqs
+
+    def lookup(
+        self,
+        indices: np.ndarray,
+        mask: np.ndarray,
+        mean_normalize: bool = True,
+    ) -> np.ndarray:
+        """[B,F,nnz] -> [B,F,D] pooled, through the engine pool.
+
+        Same contract as the legacy service (mean_normalize=False returns
+        float64 per-bag sums for exact tier merging); the merge runs in
+        subrequest issue order so the result is schedule-independent.
+        """
+        B, F, _ = indices.shape
+        fused, bag, bounds, num_bags, D = self._plan_fanout(indices, mask)
+        entry = 4 + D * self.servers[0].rows.dtype.itemsize
+        subreqs = self._shard_subrequests(fused, bag, bounds, num_bags, entry)
+
+        out = np.zeros((num_bags, D), np.float64)
+        if subreqs:
+            results, _ = self.pool.execute(subreqs)
+            for res in results:  # issue order: deterministic f64 merge
+                if self.pushdown:
+                    out += res  # global combine of partial pools (fig 4b)
+                else:
+                    rows, bags = res  # ranker-side pooling (fig 4a)
+                    np.add.at(out, bags, rows)
+        return self._finalize(out.reshape(B, F, D), mask, mean_normalize)
+
+    # ------------------------------------------------------------------ stats
+
+    @property
+    def virtual_latencies(self):
+        """Per-batch virtual lookup latencies (seconds, bounded recent
+        window), from the verbs timing model."""
+        return self.pool.virtual_latencies
+
+    def engine_summary(self) -> dict:
+        return self.pool.summary()
+
+    # ------------------------------------------------------------------ close
+
+    def close(self) -> None:
+        self.pool.close()

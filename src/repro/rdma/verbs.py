@@ -1,0 +1,192 @@
+"""Simulated RDMA verbs layer for the multi-threaded lookup engine (§3.2).
+
+Paper anchor: §3.2 — "an optimized multi-threaded RDMA engine for concurrent
+lookup subrequests".  This container has no RNIC, so the *timing* of the
+verbs path is simulated while the *data* path (the numpy gather/pool at each
+embedding server) is executed for real by the engine threads in
+``repro.rdma.engine``.
+
+The model, in verbs vocabulary:
+
+  * ``LookupSubrequest`` is one work request (WR): a per-shard slice of a
+    batched lookup, destined for one embedding server.
+  * Each engine thread owns a private queue pair (QP) per server — the
+    mapping-aware design of Fig 6 (right): no two threads ever share a
+    send queue, so there is no cross-thread unit contention to pay.
+  * WRs are posted in *doorbell batches*: one MMIO doorbell (``t_doorbell``)
+    covers up to ``doorbell_batch`` WQE writes (``t_post`` each) — the
+    standard verbs amortization, mirrored on the completion side by polling
+    the CQ in sweeps.
+  * A QP's wire serializes: two responses on the same QP cannot overlap, so
+    a shard whose subrequests all land on one thread is wire-bound until
+    work-stealing spreads its chunks across threads (and thus across QPs).
+  * The bounded in-flight window (``max_inflight``) models the §3.2 credit
+    loop: a post whose window is full waits for the earliest outstanding
+    completion — ``core.flow_control.CreditGate`` enforces the same bound on
+    the real threads.
+
+``plan_schedule`` runs this model as a deterministic discrete-event
+simulation over per-thread virtual clocks.  It decides which engine posts
+each WR (idle engines steal from the longest backlog, exactly the policy the
+real threads apply) and stamps every WR with its virtual completion time.
+Determinism matters: per-batch p50/p99 and per-thread utilization must not
+depend on OS scheduling noise, or the benchmark baselines and the simulator
+calibration (``runtime.simulator.calibrate_to_engine``) would drift run to
+run.
+
+Invariants:
+  * Scheduling never reorders the *merge*: results are combined in subrequest
+    issue order by the service layer, so pooled outputs are bit-equal across
+    thread counts, chunk sizes, and stealing decisions.
+  * ``plan_schedule`` touches only timing fields (``engine``, ``stolen``,
+    ``v_complete``); row data flows exclusively through the real execution
+    path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class VerbsTiming:
+    """Calibration constants of the simulated verbs path.
+
+    Defaults follow ``runtime.simulator.SimConfig`` (1us WQE post, 3us
+    server-side processing, 100 Gbps wire) so the two models start from the
+    same regime; ``calibrate_to_engine`` closes the remaining gap.
+    """
+
+    t_doorbell: float = 0.4e-6  # MMIO doorbell ring, once per batch
+    t_post: float = 1.0e-6  # WQE build + post, per work request
+    t_steal: float = 0.25e-6  # deque CAS + cacheline bounce on a steal
+    t_server: float = 3.0e-6  # embedding-server processing per WR
+    wire_bps: float = 100e9 / 8  # response payload bytes/s
+
+
+@dataclasses.dataclass
+class LookupSubrequest:
+    """One work request: a per-shard (sub-)slice of a batched lookup."""
+
+    server: int
+    row_ids: np.ndarray
+    bag_ids: np.ndarray
+    num_bags: int
+    pushdown: bool
+    response_bytes: int
+    slot: int  # issue-order position == result slot (merge order)
+    # Stamped by plan_schedule:
+    engine: int = -1
+    stolen: bool = False
+    v_complete: float = 0.0
+
+
+@dataclasses.dataclass
+class SchedulePlan:
+    """Output of plan_schedule for one batch of subrequests."""
+
+    assignments: list  # assignments[tid] = ordered [LookupSubrequest]
+    makespan: float  # virtual batch latency (max completion)
+    busy: list  # per-thread posting occupancy (seconds, virtual)
+    steals: int  # WRs executed by a thread other than their affinity owner
+    doorbells: int  # doorbell batches rung
+
+
+def plan_schedule(
+    subreqs: list,
+    num_engines: int,
+    timing: VerbsTiming,
+    doorbell_batch: int = 8,
+    max_inflight: int = 32,
+    work_stealing: bool = True,
+) -> SchedulePlan:
+    """Deterministic virtual-time schedule of one batch's work requests.
+
+    Affinity dealing (shard -> thread ``shard % T``) seeds per-thread FIFO
+    queues; the event loop then advances whichever engine has the smallest
+    virtual clock.  An engine with local work posts a doorbell batch from its
+    queue head; an idle engine steals up to half the longest victim queue
+    from the *tail* (classic work-stealing order, so the owner and the thief
+    never contend for the same end).  Ties break on thread id, making the
+    schedule a pure function of the subrequest list.
+    """
+    if num_engines <= 0:
+        raise ValueError("num_engines must be positive")
+    # A doorbell group must fit the credit window or its own post could
+    # never be admitted (same clamp RdmaEnginePool applies).
+    doorbell_batch = max(1, min(doorbell_batch, max_inflight))
+    queues: list[collections.deque] = [
+        collections.deque() for _ in range(num_engines)
+    ]
+    for r in subreqs:
+        queues[r.server % num_engines].append(r)
+
+    clock = [0.0] * num_engines
+    busy = [0.0] * num_engines
+    qp_busy: dict[tuple[int, int], float] = {}  # (engine, server) -> wire free
+    inflight: list[float] = []  # completion-time heap == outstanding credits
+    assignments: list[list] = [[] for _ in range(num_engines)]
+    steals = 0
+    doorbells = 0
+    makespan = 0.0
+
+    while any(queues):
+        tid = min(range(num_engines), key=lambda t: (clock[t], t))
+        if clock[tid] == float("inf"):
+            break  # no engine can make progress (stealing disabled)
+        q = queues[tid]
+        group: list = []
+        if q:
+            while q and len(group) < doorbell_batch:
+                group.append(q.popleft())
+        elif work_stealing:
+            victim = max(
+                range(num_engines), key=lambda t: (len(queues[t]), -t)
+            )
+            n = max(1, min(len(queues[victim]) // 2, doorbell_batch))
+            for _ in range(n):
+                group.append(queues[victim].pop())
+            group.reverse()  # preserve the victim's tail in FIFO order
+            steals += len(group)
+            clock[tid] += timing.t_steal
+            busy[tid] += timing.t_steal
+            for r in group:
+                r.stolen = True
+        else:
+            clock[tid] = float("inf")  # drained and may not steal: retire
+            continue
+
+        # Credit window: block the post until the WHOLE doorbell group fits,
+        # mirroring CreditGate.acquire(len(group)) on the real threads.
+        start = clock[tid]
+        while len(inflight) + len(group) > max_inflight:
+            start = max(start, heapq.heappop(inflight))
+        while inflight and inflight[0] <= start:
+            heapq.heappop(inflight)
+
+        t = start + timing.t_doorbell
+        doorbells += 1
+        for r in group:
+            t += timing.t_post
+            qk = (tid, r.server)
+            wire = r.response_bytes / timing.wire_bps
+            wire_start = max(t, qp_busy.get(qk, 0.0))
+            qp_busy[qk] = wire_start + wire
+            r.v_complete = wire_start + wire + timing.t_server
+            heapq.heappush(inflight, r.v_complete)
+            r.engine = tid
+            assignments[tid].append(r)
+            makespan = max(makespan, r.v_complete)
+        busy[tid] += t - start
+        clock[tid] = t
+
+    return SchedulePlan(
+        assignments=assignments,
+        makespan=makespan,
+        busy=busy,
+        steals=steals,
+        doorbells=doorbells,
+    )

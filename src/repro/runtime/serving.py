@@ -4,7 +4,9 @@ together at host level.
   request queue (BucketBatcher)      — the task queue of Fig 5
   SlidingWindowLoadMonitor           — §3.1.1 temporal-dynamics tracing
   AdaptiveCacheController            — §3.1.1 cache sizing (+field replication)
-  HostLookupService                  — §3.2 multi-threaded engine (DRAM shards)
+  PooledLookupService                — §3.2 multi-threaded rdma engine pool
+                                       (engine="legacy" keeps the old
+                                       per-connection HostLookupService)
   hedged subrequests                 — straggler mitigation: a lookup that
                                        exceeds `hedge_timeout` is re-executed
                                        ranker-side from the authoritative shard
@@ -29,6 +31,7 @@ from repro.core.sharding import FusedTables
 from repro.data.pipeline import BucketBatcher
 from repro.hotcache.miss_path import HostHashCache, TieredLookupService
 from repro.models import recsys as R
+from repro.rdma.service import PooledLookupService
 from repro.utils import logger
 
 
@@ -98,15 +101,27 @@ class FlexEMRServer:
         hedge_timeout: float = 0.05,
         cache_refresh_every: int = 16,
         prefetcher=None,  # repro.prefetch.PrefetchEngine | None
+        engine: str = "pooled",  # 'pooled' (§3.2 rdma pool) | 'legacy'
     ):
         self.cfg = cfg
         self.params = params
         self.tables = tables
         table_np = np.asarray(params["emb"]["table"])
         self.table_np = table_np
-        self.service = HostLookupService(
-            tables, table_np, num_engines=num_engines, pushdown=pushdown
-        )
+        if engine == "pooled":
+            # §3.2: miss-path subrequests run on the rdma engine pool
+            # (per-thread QPs, work stealing, doorbell batching, credit
+            # window); num_engines becomes the pool's thread count.
+            self.service = PooledLookupService(
+                tables, table_np, num_threads=num_engines, pushdown=pushdown
+            )
+        elif engine == "legacy":
+            self.service = HostLookupService(
+                tables, table_np, num_engines=num_engines, pushdown=pushdown
+            )
+        else:
+            raise ValueError(f"unknown engine {engine!r} (pooled|legacy)")
+        self.engine = engine
         self.controller = controller
         self.hedge_timeout = hedge_timeout
         self.cache_refresh_every = cache_refresh_every
@@ -276,6 +291,13 @@ class FlexEMRServer:
                 self.prefetcher.piggyback(ids[~already], cache, self.service)
                 self.prefetcher.decay()
         logger.info("cache plan applied: %s", plan.reason)
+
+    def engine_summary(self) -> dict | None:
+        """repro.rdma pool stats (virtual p50/p99, utilization, steals,
+        credit window) when serving on the pooled engine; None on legacy."""
+        if hasattr(self.service, "engine_summary"):
+            return self.service.engine_summary()
+        return None
 
     def close(self):
         self.service.close()

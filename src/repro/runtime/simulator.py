@@ -20,7 +20,9 @@ Calibration: t_post=1.0us, t_contention=0.35us (verbs lock handoff), t_server
 =3us, 100 Gbps wire.  With 4 engines / 4 units / 16 servers this yields
 ~2.4-2.5x mapping-aware over naive — the paper's "up to 2.3x" regime
 (Fig 8 left); the property test only pins the [1.5x, 4x] band so the claim
-is robust to the constants.
+is robust to the constants.  ``calibrate_to_engine`` replaces the hand-picked
+``t_post`` with one fitted to the per-thread utilization the repro.rdma
+engine pool actually measured, anchoring the sweeps to the engine we run.
 """
 from __future__ import annotations
 
@@ -220,6 +222,60 @@ class LookupSimulator:
             if candidates:
                 counts = {u: dst_units.count(u) for u in candidates}
                 self.conn_unit[hot_conn] = min(candidates, key=lambda u: counts.get(u, 0))
+
+
+def calibrate_to_engine(
+    measured_utilization,
+    n_batches: int = 300,
+    t_post_bounds: tuple[float, float] = (0.05e-6, 20e-6),
+    tol: float = 0.02,
+    max_iters: int = 16,
+    **overrides,
+) -> dict:
+    """Calibrate the contention model against the real engine pool (§3.2).
+
+    ``measured_utilization`` is ``RdmaEnginePool.utilization()`` — the
+    per-thread posting occupancy the repro.rdma engine measured on its
+    (deterministic) verbs timing layer.  The simulator's utilization is
+    monotone in ``t_post`` (posting cost vs wire/server time), so a
+    geometric bisection on ``t_post`` finds the constant at which the
+    simulator's mean per-engine utilization reproduces the engine's — after
+    which its naive-vs-aware and migration sweeps extrapolate from a model
+    anchored to the engine we actually run, not to hand-picked constants.
+
+    Returns ``{"t_post", "target_utilization", "achieved_utilization",
+    "iterations", "cfg"}``; pass engine-pool geometry (``n_engines``,
+    ``n_units``, ...) through ``**overrides``.
+    """
+    target = float(np.mean(np.asarray(measured_utilization, np.float64)))
+    target = float(np.clip(target, 1e-3, 0.98))
+    lo, hi = t_post_bounds
+
+    def mean_util(t_post: float) -> tuple[float, SimConfig]:
+        cfg = SimConfig(t_post=t_post, n_batches=n_batches, **overrides)
+        out = LookupSimulator(cfg).run()
+        return float(np.mean(out["engine_utilization"])), cfg
+
+    best: dict = {}
+    for i in range(max_iters):
+        mid = (lo * hi) ** 0.5
+        util, cfg = mean_util(mid)
+        err = util - target
+        if not best or abs(err) < abs(best["achieved_utilization"] - target):
+            best = {
+                "t_post": mid,
+                "target_utilization": target,
+                "achieved_utilization": util,
+                "iterations": i + 1,
+                "cfg": cfg,
+            }
+        if abs(err) <= tol:
+            break
+        if util < target:
+            lo = mid
+        else:
+            hi = mid
+    return best
 
 
 def compare_engines(**overrides) -> dict:

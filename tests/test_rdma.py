@@ -1,0 +1,359 @@
+"""repro.rdma: engine-pool correctness, scheduling, flow control, shutdown.
+
+The load-bearing contracts:
+  * result invariance — pooled outputs bit-equal the legacy engine and every
+    pool configuration (thread count, chunking, stealing);
+  * the single-thread pool IS the legacy engine configuration;
+  * work stealing rescues the pathological all-one-shard batch;
+  * clean shutdown completes in-flight subrequests;
+  * the credit window (core.flow_control.CreditGate) bounds in-flight WRs;
+  * the simulator calibrates to the pool's measured utilization.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flow_control import CreditGate
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data import synthetic as syn
+from repro.rdma import (
+    LookupSubrequest,
+    PooledLookupService,
+    RdmaEnginePool,
+    VerbsTiming,
+    plan_schedule,
+)
+
+
+def _specs():
+    return (
+        TableSpec("a", 500, nnz=4),
+        TableSpec("b", 300, nnz=2, pooling="mean"),
+        TableSpec("c", 40, nnz=1),
+    )
+
+
+def _setup(num_shards=4, dim=16):
+    from repro.core.embedding import DisaggEmbedding
+
+    specs = _specs()
+    emb = DisaggEmbedding(specs=specs, dim=dim, num_shards=num_shards)
+    params = emb.init(jax.random.key(0))
+    tables = make_fused_tables(specs, dim, num_shards)
+    return emb, params, tables, np.asarray(params["table"])
+
+
+def _one_shard_batch(rng, tables, batch=32):
+    """Every valid id lands in shard 0: field 0, ids < rows_per_shard."""
+    F = len(tables.specs)
+    nnz = max(t.nnz for t in tables.specs)
+    span = min(tables.rows_per_shard, tables.specs[0].vocab)
+    idx = rng.integers(0, span, size=(batch, F, nnz)).astype(np.int64)
+    msk = np.zeros((batch, F, nnz), bool)
+    msk[:, 0, :] = True
+    return idx, msk
+
+
+# ------------------------------------------------------------ result parity
+
+
+def test_pooled_matches_oracle(rng):
+    emb, params, tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp)
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 16)
+        ref = emb.lookup_reference(
+            params, jnp.asarray(b["indices"]), jnp.asarray(b["mask"])
+        )
+        out = svc.lookup(b["indices"], b["mask"])
+        np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-4, atol=1e-5)
+    finally:
+        svc.close()
+
+
+@pytest.mark.parametrize("pushdown", [True, False])
+def test_single_thread_pool_bit_equal_legacy(rng, pushdown):
+    """num_threads=1 is the legacy RdmaEngine as one pool configuration:
+    same fan-out plan, same rows, bit-identical pooled outputs."""
+    _, _, tables, tnp = _setup()
+    legacy = HostLookupService(tables, tnp, pushdown=pushdown)
+    pool = PooledLookupService(
+        tables, tnp, num_threads=1, pushdown=pushdown,
+        work_stealing=False, doorbell_batch=1,
+    )
+    try:
+        for _ in range(4):
+            b = syn.recsys_batch(rng, tables.specs, 32)
+            ref = legacy.lookup(b["indices"], b["mask"])
+            out = pool.lookup(b["indices"], b["mask"])
+            np.testing.assert_array_equal(out, ref)
+            # raw f64 sums (the tier-merge form) must agree bit-exactly too
+            np.testing.assert_array_equal(
+                pool.lookup(b["indices"], b["mask"], mean_normalize=False),
+                legacy.lookup(b["indices"], b["mask"], mean_normalize=False),
+            )
+    finally:
+        legacy.close()
+        pool.close()
+
+
+def test_bit_equal_across_pool_configs(rng):
+    """Thread count, chunk size, and stealing change the schedule only —
+    the merged bits never move (the repro-wide result-invariance contract)."""
+    _, _, tables, tnp = _setup()
+    batches = [syn.recsys_batch(rng, tables.specs, 24) for _ in range(3)]
+    outs = []
+    for threads, chunk, steal in [
+        (1, 64, False), (2, 16, True), (4, 8, True), (4, 4, False),
+    ]:
+        svc = PooledLookupService(
+            tables, tnp, num_threads=threads,
+            max_rows_per_subrequest=chunk, work_stealing=steal,
+        )
+        try:
+            outs.append(
+                [svc.lookup(b["indices"], b["mask"]) for b in batches]
+            )
+        finally:
+            svc.close()
+    for other in outs[1:]:
+        for a, b in zip(outs[0], other):
+            np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------- work stealing
+
+
+def test_work_stealing_pathological_one_shard_batch(rng):
+    """All subrequests affinity-deal to one engine; stealing must spread
+    them (deterministic virtual schedule) and cut the batch latency."""
+    _, _, tables, tnp = _setup()
+    idx, msk = _one_shard_batch(rng, tables)
+    lat = {}
+    outs = {}
+    for steal in (True, False):
+        svc = PooledLookupService(
+            tables, tnp, num_threads=4, max_rows_per_subrequest=4,
+            work_stealing=steal,
+        )
+        try:
+            outs[steal] = svc.lookup(idx, msk)
+            lat[steal] = svc.virtual_latencies[0]
+            if steal:
+                assert svc.pool.virtual_steals > 0
+                # more than one virtual engine ended up posting
+                assert sum(b > 0 for b in svc.pool.virtual_busy) > 1
+        finally:
+            svc.close()
+    np.testing.assert_array_equal(outs[True], outs[False])
+    assert lat[True] < lat[False], lat
+    assert lat[False] / lat[True] > 1.3, lat
+
+
+def test_schedule_deterministic():
+    """plan_schedule is a pure function of the subrequest list — the bench
+    baselines and the calibration depend on it."""
+    timing = VerbsTiming()
+
+    def mk():
+        return [
+            LookupSubrequest(
+                server=i % 3,
+                row_ids=np.arange(4),
+                bag_ids=np.zeros(4, np.int64),
+                num_bags=8,
+                pushdown=True,
+                response_bytes=2048,
+                slot=i,
+            )
+            for i in range(17)
+        ]
+
+    a = plan_schedule(mk(), 4, timing, doorbell_batch=4, max_inflight=8)
+    b = plan_schedule(mk(), 4, timing, doorbell_batch=4, max_inflight=8)
+    assert a.makespan == b.makespan
+    assert a.busy == b.busy
+    assert a.steals == b.steals
+    assert [[r.slot for r in lane] for lane in a.assignments] == [
+        [r.slot for r in lane] for lane in b.assignments
+    ]
+
+
+# ------------------------------------------------------------ flow control
+
+
+def test_credit_gate_blocks_and_releases():
+    gate = CreditGate(2)
+    assert gate.acquire(2)
+    assert not gate.acquire(1, timeout=0.02)  # window full
+    assert gate.stalls >= 1
+
+    t = threading.Thread(target=lambda: (time.sleep(0.05), gate.release(2)))
+    t.start()
+    assert gate.acquire(1, timeout=2.0)  # unblocked by the release
+    t.join()
+    gate.release(1)
+    assert gate.inflight == 0
+    assert gate.peak == 2
+    with pytest.raises(ValueError):
+        gate.acquire(3)  # larger than the window: would deadlock
+    with pytest.raises(RuntimeError):
+        gate.release(1)  # nothing held
+
+
+def test_pool_respects_credit_window(rng):
+    """peak in-flight never exceeds the window, and a 1-credit window still
+    completes every subrequest (just serially)."""
+    _, _, tables, tnp = _setup()
+    svc = PooledLookupService(
+        tables, tnp, num_threads=4, max_inflight=1, max_rows_per_subrequest=4
+    )
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 32)
+        out = svc.lookup(b["indices"], b["mask"])
+        assert svc.pool.gate.peak <= 1
+        assert svc.pool.doorbell_batch == 1
+    finally:
+        svc.close()
+    ref_svc = HostLookupService(tables, tnp)
+    try:
+        np.testing.assert_array_equal(
+            out, ref_svc.lookup(b["indices"], b["mask"])
+        )
+    finally:
+        ref_svc.close()
+
+
+# ----------------------------------------------------------- clean shutdown
+
+
+def test_clean_shutdown_with_inflight_subrequests(rng):
+    """close() drains: batches submitted and not yet waited-on complete,
+    their handles resolve, and the threads exit."""
+    _, _, tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=2)
+    b = syn.recsys_batch(rng, tables.specs, 48)
+    fused, bag, bounds, num_bags, D = svc._plan_fanout(
+        b["indices"], b["mask"]
+    )
+    entry = 4 + D * tnp.dtype.itemsize
+    handles = [
+        svc.pool.submit(
+            svc._shard_subrequests(fused, bag, bounds, num_bags, entry)
+        )
+        for _ in range(6)
+    ]
+    svc.close()  # in-flight work must complete, not drop
+    for h in handles:
+        res = h.wait(timeout=1.0)
+        assert all(r is not None for r in res)
+    assert all(not t.is_alive() for t in svc.pool.threads)
+    with pytest.raises(RuntimeError):
+        svc.pool.submit([])
+    svc.close()  # idempotent
+
+
+def test_failed_subrequest_raises_not_hangs(rng):
+    """A WR whose server-side execution raises must resolve the batch with
+    the error (not hang wait()) and leave the engine threads alive."""
+    _, _, tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=2)
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 16)
+        boom = RuntimeError("injected server failure")
+
+        orig = svc.servers[0].lookup_pooled
+        svc.servers[0].lookup_pooled = lambda *a, **k: (_ for _ in ()).throw(
+            boom
+        )
+        with pytest.raises(RuntimeError, match="injected server failure"):
+            svc.lookup(b["indices"], b["mask"])
+        svc.servers[0].lookup_pooled = orig
+        assert all(t.is_alive() for t in svc.pool.threads)
+        # the pool still serves correctly afterwards
+        out = svc.lookup(b["indices"], b["mask"])
+        ref_svc = HostLookupService(tables, tnp)
+        try:
+            np.testing.assert_array_equal(
+                out, ref_svc.lookup(b["indices"], b["mask"])
+            )
+        finally:
+            ref_svc.close()
+    finally:
+        svc.close()
+
+
+def test_empty_and_fully_masked_lookup(rng):
+    _, _, tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp)
+    try:
+        idx = np.zeros((4, 3, 4), np.int64)
+        msk = np.zeros((4, 3, 4), bool)
+        out = svc.lookup(idx, msk)
+        assert out.shape == (4, 3, 16)
+        np.testing.assert_array_equal(out, np.zeros_like(out))
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------- simulator calibration
+
+
+def test_simulator_calibrates_to_pool_utilization(rng):
+    from repro.runtime.simulator import calibrate_to_engine
+
+    _, _, tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=4)
+    try:
+        for _ in range(6):
+            b = syn.recsys_batch(rng, tables.specs, 32)
+            svc.lookup(b["indices"], b["mask"])
+        util = svc.pool.utilization()
+    finally:
+        svc.close()
+    assert (util >= 0).all() and (util <= 1).all()
+    cal = calibrate_to_engine(util, n_batches=150, n_engines=4, n_units=4)
+    assert abs(
+        cal["achieved_utilization"] - cal["target_utilization"]
+    ) < 0.1, cal
+
+
+# --------------------------------------------------------------- reporting
+
+
+def test_engine_summary_shape(rng):
+    _, _, tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=3)
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 16)
+        svc.lookup(b["indices"], b["mask"])
+        s = svc.engine_summary()
+    finally:
+        svc.close()
+    assert s["num_threads"] == 3
+    assert s["batches"] == 1
+    assert s["subrequests"] == sum(s["executed"])
+    assert len(s["utilization"]) == 3
+    assert s["p99_latency_us"] >= s["p50_latency_us"] > 0
+    assert s["credit_window"]["peak"] <= s["credit_window"]["max_credits"]
+
+
+def test_architecture_doc_covers_every_package():
+    """Mirror of the CI docs check: docs/ARCHITECTURE.md must mention every
+    src/repro/* package so the paper-to-code map cannot silently rot."""
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    doc = (root / "docs" / "ARCHITECTURE.md").read_text()
+    pkgs = sorted(
+        p.name
+        for p in (root / "src" / "repro").iterdir()
+        if p.is_dir() and (p / "__init__.py").exists()
+    )
+    missing = [p for p in pkgs if p not in doc]
+    assert not missing, f"ARCHITECTURE.md misses packages: {missing}"

@@ -1,0 +1,38 @@
+"""CI docs check: docs/ARCHITECTURE.md must mention every src/repro package.
+
+The paper-to-code map is only useful while it is complete; this gate fails
+the build when a new subsystem package lands without an ARCHITECTURE.md
+entry.  Mirrored as a tier-1 test in tests/test_rdma.py so it also fails
+locally.
+
+  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def main() -> int:
+    doc_path = ROOT / "docs" / "ARCHITECTURE.md"
+    if not doc_path.exists():
+        print("FAIL: docs/ARCHITECTURE.md is missing")
+        return 1
+    doc = doc_path.read_text()
+    pkgs = sorted(
+        p.name
+        for p in (ROOT / "src" / "repro").iterdir()
+        if p.is_dir() and (p / "__init__.py").exists()
+    )
+    missing = [p for p in pkgs if p not in doc]
+    if missing:
+        print(f"FAIL: ARCHITECTURE.md does not mention: {missing}")
+        return 1
+    print(f"ok: ARCHITECTURE.md covers all {len(pkgs)} src/repro packages")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
