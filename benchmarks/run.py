@@ -6,10 +6,10 @@ quantity), then the full §Roofline table assembled from the dry-run artifacts.
   PYTHONPATH=src python -m benchmarks.run            # full sweep
   PYTHONPATH=src python -m benchmarks.run --smoke    # seconds-scale subset
 
-``--smoke`` runs the fast regression subset — the hotcache, prefetch, and
-rdma benches in their shrunk configurations — so cache-, prefetch-, and
-engine-path regressions show up in the bench trajectory without paying for
-the full figure sweep.
+``--smoke`` runs the fast regression subset — the hotcache, prefetch, rdma,
+and pipeline benches in their shrunk configurations — so cache-, prefetch-,
+engine-, and pipeline-path regressions show up in the bench trajectory
+without paying for the full figure sweep.
 """
 from __future__ import annotations
 
@@ -22,7 +22,8 @@ import traceback
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="fast regression subset (hotcache/prefetch/rdma)")
+                    help="fast regression subset "
+                    "(hotcache/prefetch/rdma/pipeline)")
     opts = ap.parse_args(argv)
     rows = []
 
@@ -38,7 +39,12 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
 
-    from benchmarks import hotcache_bench, prefetch_bench, rdma_bench
+    from benchmarks import (
+        hotcache_bench,
+        pipeline_bench,
+        prefetch_bench,
+        rdma_bench,
+    )
 
     hotcache_derive = lambda o: (  # noqa: E731
         f"bytes_reduction={o['bytes_reduction']:.2f}x "
@@ -58,6 +64,13 @@ def main(argv=None) -> None:
         f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
         f"calib_t_post={o['calibrated_t_post_us']:.2f}us"
     )
+    pipeline_derive = lambda o: (  # noqa: E731
+        f"depth2_speedup={o['pipeline_speedup']:.2f}x "
+        f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
+        f"hedge_cancelled={o['hedge_cancelled_wrs']} "
+        f"calib_err="
+        f"{abs(o['calibration_achieved_util'] - o['calibration_target_util']):.3f}"
+    )
 
     if opts.smoke:
         bench(
@@ -74,6 +87,11 @@ def main(argv=None) -> None:
             "rdma_smoke",
             lambda: rdma_bench.run(smoke=True),
             rdma_derive,
+        )
+        bench(
+            "pipeline_smoke",
+            lambda: pipeline_bench.run(smoke=True),
+            pipeline_derive,
         )
         failed = [r for r in rows if r[2] == "FAILED"]
         if failed:
@@ -126,6 +144,7 @@ def main(argv=None) -> None:
     bench("hotcache", hotcache_bench.run, hotcache_derive)
     bench("prefetch", prefetch_bench.run, prefetch_derive)
     bench("rdma", rdma_bench.run, rdma_derive)
+    bench("pipeline", pipeline_bench.run, pipeline_derive)
 
     print()
     try:

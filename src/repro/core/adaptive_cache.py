@@ -193,6 +193,27 @@ class AdaptiveCacheController:
         self.monitor.observe(batch_size)
         self.tracker.update(row_ids)
 
+    def shard_heat(
+        self, rows_per_shard: int, num_shards: int
+    ) -> np.ndarray:
+        """Decayed traffic per row-range shard — the §3.2 skew signal.
+
+        Sums the frequency tracker's per-row scores by owning shard (fused
+        id // rows_per_shard, the core.sharding.RangeRouter layout).  The
+        rdma engine pool's heat-weighted shard->thread dealing
+        (``repro.rdma.heat_affinity``) consumes this so hot shards spread
+        across engine threads before work stealing has to rescue them.
+        All-zero while the tracker is empty (callers keep the modulo deal).
+        """
+        if rows_per_shard <= 0 or num_shards <= 0:
+            raise ValueError("rows_per_shard and num_shards must be positive")
+        heat = np.zeros(num_shards, np.float64)
+        ids, scores = self.tracker._ids, self.tracker._score
+        if len(ids):
+            shard = np.clip(ids // rows_per_shard, 0, num_shards - 1)
+            np.add.at(heat, shard, scores)
+        return heat
+
     def plan(self, current_batch: int) -> CachePlan:
         budget = self.memory_model.cache_budget_bytes(
             max(current_batch, int(self.monitor.smoothed_batch))

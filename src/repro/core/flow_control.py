@@ -153,6 +153,18 @@ class CreditedConnection:
         self.credit_latencies: list[float] = []
         self.response_latencies: list[float] = []
 
+    def credit_return_latency(self) -> float:
+        """Unloaded flight time of one credit grant back to the server.
+
+        This is the *floor* a blocked post pays for the window to reopen
+        (under load the strawman's shared channel pays far more — that is
+        ``run_burst``'s whole point).  The rdma verbs model charges exactly
+        this floor per credit-blocked post (``VerbsTiming.t_credit_return``
+        / ``VerbsTiming.from_flow_control``), so simulated p99 reflects
+        window stalls instead of pricing them at zero.
+        """
+        return self.credit_size * self.up_credit.byte_time
+
     def run_burst(self, num_responses: int, request_size: float = 64.0) -> dict:
         # request_size=64 puts the shared channel at ~70% utilization — the
         # paper's regime (~35-40% credit-latency win).  At >=96B the strawman

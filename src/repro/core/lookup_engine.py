@@ -142,6 +142,30 @@ class RdmaEngine(threading.Thread):
         self._wake.set()
 
 
+class CompletedLookup:
+    """Trivially-completed lookup handle: the result is already materialized.
+
+    The async lookup surface every engine shares is ``lookup_async(...) ->
+    handle`` with ``handle.wait() -> [B, F, D]``, ``handle.done``, and
+    ``handle.hedged``.  Engines without a genuinely asynchronous path (this
+    legacy per-connection engine) resolve at call time and hand back this
+    handle, so a pipelined caller (``runtime.serving.FlexEMRServer`` at
+    ``pipeline_depth > 1``) degrades gracefully to closed-loop instead of
+    needing a separate code path.  The §3.2 pool's real future lives in
+    ``repro.rdma.service.LookupHandle``.
+    """
+
+    __slots__ = ("_out", "hedged")
+    done = True
+
+    def __init__(self, out: np.ndarray):
+        self._out = out
+        self.hedged = 0
+
+    def wait(self, timeout: float | None = None) -> np.ndarray:
+        return self._out
+
+
 class HostLookupService:
     """The ranker-side lookup frontend over host embedding servers.
 
@@ -293,6 +317,18 @@ class HostLookupService:
                 np.add.at(out, bags, rows)
         # Mean-pool fields divide by their valid counts.
         return self._finalize(out.reshape(B, F, D), mask, mean_normalize)
+
+    def lookup_async(
+        self,
+        indices: np.ndarray,
+        mask: np.ndarray,
+        mean_normalize: bool = True,
+        hedge_timeout: float | None = None,
+    ) -> CompletedLookup:
+        """Async-surface fallback: executes synchronously, returns a
+        ``CompletedLookup``.  ``hedge_timeout`` is accepted for signature
+        parity and ignored — this engine has no pool to hedge through."""
+        return CompletedLookup(self.lookup(indices, mask, mean_normalize))
 
     def gather_rows(self, row_ids: np.ndarray) -> np.ndarray:
         """Raw rows by fused id — the hotcache swap-in fetch (off the serving

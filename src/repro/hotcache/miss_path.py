@@ -23,6 +23,14 @@ latter, so tier-1 subrequests ride the multi-threaded rdma engine pool):
                                    admission threshold (policy.py); swap-in
                                    fetch bytes are tracked separately
 
+The lookup is split into two phases around an asynchronous miss handle
+(cross-batch pipelining, §3.2): ``lookup_begin`` probes the cache, pools the
+hits, and *posts* the miss subrequests (returning a ``PendingTieredLookup``);
+``wait`` blocks on the remote handle and performs the float64 tier merge.  A
+pipelined serving loop calls ``lookup_begin`` for batch N+1 while batch N's
+misses are still on the wire — the probe and the fetch overlap.  ``lookup``
+is the closed-loop composition (begin + wait) and is unchanged in behaviour.
+
 Invariants:
   * Result invariance (bit-equal): all tier merging accumulates in float64
     over the (exactly representable) float32 rows, so *where* a row is
@@ -221,12 +229,58 @@ class TieredStats:
         }
 
 
+class PendingTieredLookup:
+    """One in-flight tiered lookup: cache hits pooled, misses posted.
+
+    Produced by ``TieredLookupService.lookup_begin``; ``wait()`` blocks on
+    the remote handle, folds the miss sums into the hit sums (float64 — the
+    split-invariant tier merge), normalizes mean fields once over the full
+    counts, and runs the deferred LFU refresh if this batch was due one.
+    Idempotent: the merged result is cached.
+    """
+
+    def __init__(self, tier: "TieredLookupService", sums: np.ndarray,
+                 mask: np.ndarray, remote, do_refresh: bool):
+        self._tier = tier
+        self._sums = sums
+        self._mask = mask
+        self._remote = remote  # async-handle surface or None (no misses)
+        self._do_refresh = do_refresh
+        self._out: np.ndarray | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._out is not None or self._remote is None \
+            or self._remote.done
+
+    @property
+    def hedged(self) -> int:
+        """Duplicate subrequests the miss handle's straggler hedge issued."""
+        return 0 if self._remote is None else getattr(self._remote, "hedged", 0)
+
+    def wait(self, timeout: float | None = None) -> np.ndarray:
+        if self._out is not None:
+            return self._out
+        if self._remote is not None:
+            self._sums += np.asarray(self._remote.wait(timeout), np.float64)
+        out = self._tier._mean_normalize(self._sums, self._mask)
+        self._out = out.astype(np.float32)
+        if self._do_refresh:
+            self._tier.refresh()
+        return self._out
+
+
 class TieredLookupService:
     """Hash-cache tier in front of a HostLookupService (see module docstring).
 
     ``remote_fn(indices, cold_mask) -> [B, F, D] unnormalized sums`` may be
-    injected (the serving runtime passes its hedged lookup); the default goes
-    straight to ``service.lookup(..., mean_normalize=False)``.
+    injected (a synchronous miss executor — it runs eagerly at
+    ``lookup_begin`` time, so it serializes with the probe); the pipelined
+    alternative is ``remote_async_fn(indices, cold_mask) -> handle`` whose
+    ``handle.wait()`` yields the same sums (the serving runtime passes the
+    pool-hedged ``PooledLookupService.lookup_async``).  With neither
+    injected, the tier uses ``service.lookup_async`` when the engine offers
+    it and falls back to the eager ``service.lookup`` otherwise.
 
     ``refresh_every=0`` disables the self-driven LFU refresh: an external
     controller (runtime.serving + core.adaptive_cache) owns the swap-in
@@ -246,9 +300,12 @@ class TieredLookupService:
         max_probes: int = 8,
         refresh_every: int = 8,
         remote_fn=None,
+        remote_async_fn=None,
         track_bytes: bool = True,
         prefetcher: "PrefetchEngine | None" = None,
     ):
+        if remote_fn is not None and remote_async_fn is not None:
+            raise ValueError("pass remote_fn OR remote_async_fn, not both")
         self.service = service
         dim = service.servers[0].rows.shape[1]
         self.cache = HostHashCache(num_slots, dim, max_probes=max_probes)
@@ -259,6 +316,8 @@ class TieredLookupService:
         self.remote_fn = remote_fn or (
             lambda idx, cold: service.lookup(idx, cold, mean_normalize=False)
         )
+        self.remote_async_fn = remote_async_fn
+        self._remote_injected = remote_fn is not None
         self.tracker = EmaFrequencyTracker(decay=self.policy.decay)
         self.stats = TieredStats()
         self._offsets = service.tables.field_offsets_array()
@@ -266,12 +325,41 @@ class TieredLookupService:
 
     # ---------------------------------------------------------------- lookup
 
-    def lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
-        """[B,F,nnz] -> [B,F,D] pooled; only cache misses hit the network."""
+    def _remote_begin(self, indices: np.ndarray, cold: np.ndarray):
+        """Post (or eagerly run) the miss tier; returns an async handle."""
+        if self.remote_async_fn is not None:
+            return self.remote_async_fn(indices, cold)
+        if not self._remote_injected and hasattr(self.service, "lookup_async"):
+            return self.service.lookup_async(
+                indices, cold, mean_normalize=False
+            )
+        # Deferred import: a module-level one would close the
+        # core.embedding -> hotcache -> lookup_engine cycle (see top).
+        from repro.core.lookup_engine import CompletedLookup
+
+        return CompletedLookup(
+            np.asarray(self.remote_fn(indices, cold), np.float64)
+        )
+
+    def lookup_begin(
+        self, indices: np.ndarray, mask: np.ndarray
+    ) -> PendingTieredLookup:
+        """Probe + post phase of one [B,F,nnz] lookup (pipelined form).
+
+        Probes the cache, pools the hits in float64, posts the miss
+        subrequests through the engine, and returns a
+        ``PendingTieredLookup`` whose ``wait()`` performs the merge.  All
+        cache/tracker mutation happens here on the calling thread — the
+        engine threads only gather from the immutable shards — so a serving
+        loop may begin batch N+1 while batch N is still pending without any
+        tier-level locking.
+        """
         mask = np.asarray(mask, bool)
         fused = indices.astype(np.int64) + self._offsets[None, :, None]
         self.stats.batches += 1
         self.stats.lookups += int(mask.sum())
+        do_refresh = bool(self.refresh_every) and \
+            self.stats.batches % self.refresh_every == 0
         if self.track_bytes:
             self.stats.bytes_no_cache += self.service.network_bytes(indices, mask)
         if self.prefetcher is not None:
@@ -303,19 +391,27 @@ class TieredLookupService:
             out = np.zeros(mask.shape[:2] + (self.cache.rows.shape[1],),
                            np.float64)
 
+        remote = None
         cold = mask & ~hit
         if cold.any():
             if self.track_bytes:
                 self.stats.bytes_network += self.service.network_bytes(
                     indices, cold
                 )
-            out += np.asarray(self.remote_fn(indices, cold), np.float64)
-            self.tracker.update(fused[cold])
+            remote = self._remote_begin(indices, cold)
+            if self.refresh_every:
+                # The tier-local LFU tracker only feeds the self-driven
+                # refresh; with refresh_every=0 an external controller owns
+                # admissions (and runs its own tracker), so updating here
+                # would be pure serial overhead on the pipelined hot path.
+                self.tracker.update(fused[cold])
+        return PendingTieredLookup(self, out, mask, remote, do_refresh)
 
-        out = self._mean_normalize(out, mask)
-        if self.refresh_every and self.stats.batches % self.refresh_every == 0:
-            self.refresh()
-        return out.astype(np.float32)
+    def lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """[B,F,nnz] -> [B,F,D] pooled; only cache misses hit the network.
+
+        Closed-loop composition of ``lookup_begin`` + ``wait``."""
+        return self.lookup_begin(indices, mask).wait()
 
     def _mean_normalize(self, sums: np.ndarray, mask: np.ndarray) -> np.ndarray:
         counts = mask.sum(-1).astype(np.float64)

@@ -4,10 +4,14 @@
 
 Exercises the full §3 pipeline: bucketed batching, the §3.2 rdma engine pool
 (``--engine legacy`` for the pre-pool per-connection threads) with pooling
-pushdown, the adaptive cache controller resizing against the load trace,
-hedged stragglers, and the jit'd dense ranker stage.  The summary includes
-the pool's virtual p50/p99, per-thread utilization, steal counts, and credit
-window under ``rdma_engine``.
+pushdown, cross-batch pipelining (``--pipeline-depth``, default 2: batch
+N+1's lookup is posted before batch N's dense stage; 1 restores the closed
+loop), the adaptive cache controller resizing against the load trace —
+which also feeds per-shard heat into the pool's skew-aware shard->thread
+dealing — pool-hedged stragglers (cancel-the-loser duplicates on another
+engine thread), and the jit'd dense ranker stage.  The summary includes the
+pool's virtual p50/p99, per-thread utilization, steal counts, hedge and
+cancellation counts, and credit window under ``rdma_engine``.
 """
 from __future__ import annotations
 
@@ -63,7 +67,7 @@ def run(args) -> dict:
     server = FlexEMRServer(
         cfg, params, tables, controller=controller,
         num_engines=args.num_engines, pushdown=not args.no_pushdown,
-        engine=args.engine,
+        engine=args.engine, pipeline_depth=args.pipeline_depth,
     )
     try:
         sizes = syn.diurnal_batches(rng, args.requests // 8, base=8, peak=64)
@@ -110,6 +114,9 @@ def main():
     ap.add_argument("--engine", choices=("pooled", "legacy"), default="pooled",
                     help="§3.2 rdma engine pool (default) or the legacy "
                     "per-connection RdmaEngine threads")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="batches in flight: N+1's lookup posts before N's "
+                    "dense stage runs (1 = closed loop, no overlap)")
     ap.add_argument("--cache-rows", type=int, default=65536)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--no-pushdown", action="store_true")

@@ -9,24 +9,34 @@ doorbell/completion batching, and a credit-bounded in-flight window.
 Layers (see each module's docstring for the paper anchor and invariants):
 
   verbs.py    simulated verbs timing + deterministic schedule planner
-  engine.py   RdmaEnginePool: real engine threads + the virtual timing layer
-  service.py  PooledLookupService: drop-in HostLookupService on the pool
+              (VerbsState carries QP/credit state across batches;
+              heat_affinity is the skew-aware shard->thread dealing)
+  engine.py   RdmaEnginePool: real engine threads + the virtual timing
+              layer, pool-side straggler hedging (cancel-the-loser)
+  service.py  PooledLookupService: drop-in HostLookupService on the pool;
+              lookup_async returns a LookupHandle for cross-batch
+              pipelined serving (runtime.serving.FlexEMRServer)
 """
 from repro.rdma.engine import BatchHandle, RdmaEnginePool
-from repro.rdma.service import PooledLookupService
+from repro.rdma.service import LookupHandle, PooledLookupService
 from repro.rdma.verbs import (
     LookupSubrequest,
     SchedulePlan,
+    VerbsState,
     VerbsTiming,
+    heat_affinity,
     plan_schedule,
 )
 
 __all__ = [
     "BatchHandle",
+    "LookupHandle",
     "LookupSubrequest",
     "PooledLookupService",
     "RdmaEnginePool",
     "SchedulePlan",
+    "VerbsState",
     "VerbsTiming",
+    "heat_affinity",
     "plan_schedule",
 ]

@@ -18,19 +18,26 @@ concurrent lookup subrequests of one batched miss-path request.
   * **Virtual timing.**  Each ``submit`` first runs
     ``verbs.plan_schedule`` — the deterministic discrete-event model of the
     same dealing/stealing policy — which prices doorbells, WQE posts, QP
-    wire serialization, server time, and credit-window waits, and stamps
-    per-WR completion times.  Batch latency (p50/p99) and per-thread
-    utilization come from this layer, so they are reproducible and usable to
-    calibrate ``runtime.simulator`` (``calibrate_to_engine``).
+    wire serialization, server time, and credit-window waits (including the
+    ``flow_control``-priced credit-return flight), and stamps per-WR virtual
+    completion times.  The model's ``verbs.VerbsState`` persists across
+    submits: a batch posted before the previous one was waited on (cross-
+    batch pipelining) is priced against busy QPs and a part-consumed credit
+    window.  Batch latency (p50/p99) and per-thread utilization come from
+    this layer, so they are reproducible and usable to calibrate
+    ``runtime.simulator`` (``calibrate_to_engine``).
 
 Invariants:
-  * Every submitted work request is executed exactly once, by exactly one
-    thread, and its result lands in its issue-order slot; callers merge in
-    slot order, so results are independent of scheduling (bit-equal across
-    thread counts, stealing, and shutdown timing).  A WR whose execution
-    raises still resolves its batch: the handle records the first failure
-    and ``wait()`` re-raises it — batches fail loudly, never hang, and the
-    engine threads survive.
+  * Every submitted work request settles its issue-order slot exactly once;
+    callers merge in slot order, so results are independent of scheduling
+    (bit-equal across thread counts, stealing, affinity tables, pipeline
+    depths, and shutdown timing).  A *hedged* duplicate (``hedge``) races
+    its primary for the slot: the first completion wins and the loser is
+    cancelled — skipped if it has not started, discarded if it has — so a
+    straggler re-issue can never double-count into the merge.  A WR whose
+    execution raises still resolves its batch: the handle records the first
+    failure and ``wait()`` re-raises it — batches fail loudly, never hang,
+    and the engine threads survive.
   * ``close()`` drains: work in flight at shutdown is completed, its batch
     handles resolve, and only then do the threads exit (clean shutdown —
     never dropped or double-executed subrequests).
@@ -41,7 +48,9 @@ Invariants:
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
+import time
 from typing import Sequence
 
 import numpy as np
@@ -50,41 +59,67 @@ from repro.core.flow_control import CreditGate
 from repro.rdma.verbs import (
     LookupSubrequest,
     SchedulePlan,
+    VerbsState,
     VerbsTiming,
+    heat_affinity,
     plan_schedule,
 )
 
 
 class BatchHandle:
-    """Completion handle of one submitted batch of subrequests."""
+    """Completion handle of one submitted batch of subrequests.
 
-    def __init__(self, n: int, virtual_latency: float):
+    Each result slot *settles* at most once (first writer wins): hedged
+    duplicates of a subrequest race for the slot and the loser's completion
+    is dropped before it can touch the merge.
+    """
+
+    def __init__(self, n: int, virtual_latency: float, v_end: float = 0.0):
         self.results: list = [None] * n
         self.virtual_latency = virtual_latency
+        self.v_end = v_end  # absolute virtual completion (frontier sync)
         self.error: Exception | None = None  # first per-WR failure
+        self.wrs: list[LookupSubrequest] = []  # originals, for hedging
+        self._settled = bytearray(n)
         self._remaining = n
         self._lock = threading.Lock()
         self._done = threading.Event()
         if n == 0:
             self._done.set()
 
-    def _complete_one(self) -> None:
+    def settled(self, slot: int) -> bool:
+        """Lock-free monotone read: once True it stays True, so a racing
+        hedge loser can only over-execute, never corrupt."""
+        return bool(self._settled[slot])
+
+    def _settle(self, slot: int, result=None, error: Exception | None = None
+                ) -> bool:
+        """First completion of ``slot`` wins; returns False for the loser."""
         with self._lock:
+            if self._settled[slot]:
+                return False
+            self._settled[slot] = 1
+            if error is not None:
+                if self.error is None:
+                    self.error = error
+            else:
+                self.results[slot] = result
             self._remaining -= 1
             if self._remaining == 0:
                 self._done.set()
+            return True
 
-    def _fail(self, exc: Exception) -> None:
+    def unsettled(self) -> list[int]:
         with self._lock:
-            if self.error is None:
-                self.error = exc
+            return [i for i in range(len(self._settled))
+                    if not self._settled[i]]
 
     def wait(self, timeout: float | None = None) -> list:
         """Results in slot order; re-raises the first subrequest failure.
 
-        A failed WR still counts down (its slot stays None), so a bad batch
-        resolves with an exception instead of hanging the caller, and the
-        engine threads survive to serve the next batch."""
+        A failed WR still settles its slot (the slot stays None), so a bad
+        batch resolves with an exception instead of hanging the caller, and
+        the engine threads survive to serve the next batch."""
         if not self._done.wait(timeout):
             raise TimeoutError("lookup batch did not complete in time")
         if self.error is not None:
@@ -106,6 +141,7 @@ class _EngineThread(threading.Thread):
         self.deque: collections.deque = collections.deque()
         self.executed = 0
         self.stolen = 0  # WRs this thread stole (real layer)
+        self.cancelled = 0  # hedge losers this thread skipped or discarded
 
     # All deque access happens under pool._cond's lock.
 
@@ -151,18 +187,35 @@ class _EngineThread(threading.Thread):
                 pool.gate.release(len(group))
 
     def _execute(self, wr: LookupSubrequest, handle: BatchHandle) -> None:
+        if handle.settled(wr.slot):
+            self.cancelled += 1  # hedge already lost: skip the gather
+            return
+        if self.pool.emulate_wire:
+            # Hold the WR for its wire + server time as a real (GIL-free)
+            # wall-clock wait — the engine thread behaves like one blocked
+            # on an RNIC completion, so cross-batch pipelining effects are
+            # measurable end to end on a machine with no RNIC (and too few
+            # cores for CPU-side overlap to stand in for wire latency).
+            t = self.pool.timing
+            time.sleep(t.t_server + wr.response_bytes / t.wire_bps)
+            if handle.settled(wr.slot):
+                self.cancelled += 1  # the twin landed while we "flew"
+                return
         try:
             srv = self.pool.servers[wr.server]
             if wr.pushdown:
                 res = srv.lookup_pooled(wr.row_ids, wr.bag_ids, wr.num_bags)
             else:
                 res = (srv.lookup_rows(wr.row_ids), wr.bag_ids)
-            handle.results[wr.slot] = res
         except Exception as exc:  # a bad WR must not kill the engine thread
-            handle._fail(exc)
-        finally:
-            self.executed += 1
-            handle._complete_one()
+            if not handle._settle(wr.slot, error=exc):
+                self.cancelled += 1  # losing twin failed: error dropped too
+                return
+        else:
+            if not handle._settle(wr.slot, result=res):
+                self.cancelled += 1  # raced a twin and lost: result dropped
+                return
+        self.executed += 1
 
 
 class RdmaEnginePool:
@@ -177,6 +230,7 @@ class RdmaEnginePool:
         max_inflight: int = 32,
         work_stealing: bool = True,
         gate: CreditGate | None = None,
+        emulate_wire: bool = False,
     ):
         if num_threads <= 0:
             raise ValueError("num_threads must be positive")
@@ -185,6 +239,11 @@ class RdmaEnginePool:
         self.timing = timing or VerbsTiming()
         self.max_inflight = max_inflight
         self.work_stealing = work_stealing
+        # emulate_wire: engine threads sleep each WR's virtual wire+server
+        # time for real (see _execute) — lookups become latency-bound like
+        # a genuine RDMA deployment, so end-to-end overlap benches work on
+        # RNIC-less CPU-starved containers.  Off for unit-latency paths.
+        self.emulate_wire = emulate_wire
         self.gate = gate or CreditGate(max_inflight)
         # A doorbell group larger than the credit window would deadlock its
         # own acquire; clamp (mirrors real engines sizing SQ depth to credits).
@@ -195,18 +254,22 @@ class RdmaEnginePool:
         self._stopping = False
         self._closed = False
         self._submit_lock = threading.Lock()
+        # shard -> thread dealing table (heat-weighted); None = shard % T.
+        self._affinity: np.ndarray | None = None
         # Virtual-layer accounting (deterministic, from plan_schedule).
         # Latencies keep a bounded recent window so a long-running server
         # neither grows without bound nor reports lifetime-global p99s.
+        self.vstate = VerbsState.fresh(num_threads)
         self.virtual_latencies: collections.deque[float] = collections.deque(
             maxlen=8192
         )
         self.virtual_busy = np.zeros(num_threads)
-        self.virtual_span = 0.0
+        self.virtual_span = 0.0  # absolute end of the virtual timeline
         self.virtual_steals = 0
         self.doorbells = 0
         self.batches = 0
         self.subrequests = 0
+        self.hedged = 0  # duplicate WRs issued by hedge()
         self.threads = [_EngineThread(self, t) for t in range(num_threads)]
         for t in self.threads:
             t.start()
@@ -216,7 +279,9 @@ class RdmaEnginePool:
     def submit(self, subreqs: list[LookupSubrequest]) -> BatchHandle:
         """Schedule (virtual) and dispatch (real) one batch of subrequests.
 
-        Thread-safe; returns immediately with a ``BatchHandle``.
+        Thread-safe; returns immediately with a ``BatchHandle``.  The batch
+        virtually arrives at the current frontier (``vstate.now``): submits
+        between two ``sync_frontier`` calls are priced as overlapped.
         """
         with self._submit_lock:
             if self._closed:
@@ -228,13 +293,18 @@ class RdmaEnginePool:
                 doorbell_batch=self.doorbell_batch,
                 max_inflight=self.max_inflight,
                 work_stealing=self.work_stealing,
+                affinity=self._affinity,
+                state=self.vstate,
             )
-            handle = BatchHandle(len(subreqs), plan.makespan)
+            handle = BatchHandle(
+                len(subreqs), plan.makespan, v_end=plan.end
+            )
+            handle.wrs = list(subreqs)
             self.batches += 1
             self.subrequests += len(subreqs)
             self.virtual_latencies.append(plan.makespan)
             self.virtual_busy += np.asarray(plan.busy)
-            self.virtual_span += plan.makespan
+            self.virtual_span = max(self.virtual_span, plan.end)
             self.virtual_steals += plan.steals
             self.doorbells += plan.doorbells
             if subreqs:
@@ -249,15 +319,74 @@ class RdmaEnginePool:
                     self._cond.notify_all()
         return handle
 
+    def sync_frontier(self, handle: BatchHandle) -> None:
+        """Advance the virtual clock to a batch the caller blocked on.
+
+        This is the virtual counterpart of a closed-loop wait: the next
+        submit arrives no earlier than this batch's completion.  A pipelined
+        caller that posts batch N+1 *before* waiting on batch N simply does
+        not sync in between, so the model prices the overlap."""
+        with self._submit_lock:
+            self.vstate.sync(handle.v_end)
+
+    def hedge(self, handle: BatchHandle) -> int:
+        """Straggler hedge through the pool: re-issue every unsettled WR of
+        ``handle`` as a duplicate on a *different* engine thread than its
+        virtual owner, jumping that thread's backlog.  First completion
+        settles the slot; the loser is cancelled (skipped before execution,
+        or its result dropped).  Returns the number of duplicates issued."""
+        with self._cond:
+            if self._stopping:
+                return 0  # draining: the primaries are guaranteed to land
+            n = 0
+            for wr in handle.wrs:
+                if handle.settled(wr.slot):
+                    continue
+                owner = wr.engine if 0 <= wr.engine < self.num_threads \
+                    else wr.server % self.num_threads
+                others = [t for t in self.threads if t.tid != owner]
+                target = min(
+                    others or self.threads, key=lambda t: (len(t.deque), t.tid)
+                )
+                target.deque.appendleft((dataclasses.replace(wr), handle))
+                n += 1
+            if n:
+                self.hedged += n
+                self._cond.notify_all()
+        return n
+
+    def set_affinity(self, affinity: np.ndarray | None) -> None:
+        """Install a shard -> thread dealing table (e.g. ``heat_affinity``
+        of the controller's per-shard heat); ``None`` restores ``shard %
+        T``.  Takes effect at the next submit — never mid-batch, so the
+        schedule stays a pure function of (subrequests, state, table)."""
+        if affinity is not None:
+            affinity = np.asarray(affinity, np.int64) % self.num_threads
+        with self._submit_lock:
+            self._affinity = affinity
+
+    def set_heat(self, shard_heat) -> None:
+        """Convenience: deal shards by measured heat (see verbs.heat_affinity)."""
+        self.set_affinity(
+            None if shard_heat is None
+            else heat_affinity(shard_heat, self.num_threads)
+        )
+
     def execute(self, subreqs: list[LookupSubrequest]) -> tuple[list, float]:
-        """Blocking submit: returns (results in slot order, virtual latency)."""
+        """Blocking submit: returns (results in slot order, virtual latency).
+
+        Closed-loop semantics: the frontier advances to this batch's
+        completion, so the next submit is priced after it (the pre-pipeline
+        model, unchanged)."""
         handle = self.submit(subreqs)
-        return handle.wait(), handle.virtual_latency
+        results = handle.wait()
+        self.sync_frontier(handle)
+        return results, handle.virtual_latency
 
     # ------------------------------------------------------------------ stats
 
     def utilization(self) -> np.ndarray:
-        """Per-thread posting occupancy over total virtual span [0, 1]."""
+        """Per-thread posting occupancy over the virtual timeline [0, 1]."""
         return self.virtual_busy / max(self.virtual_span, 1e-12)
 
     def latency_percentiles(self, qs=(50.0, 99.0)) -> dict[float, float]:
@@ -274,6 +403,8 @@ class RdmaEnginePool:
             "virtual_steals": self.virtual_steals,
             "real_steals": sum(t.stolen for t in self.threads),
             "executed": [t.executed for t in self.threads],
+            "hedged": self.hedged,
+            "hedge_cancelled": sum(t.cancelled for t in self.threads),
             "utilization": self.utilization().tolist(),
             "p50_latency_us": 1e6 * pct[50.0],
             "p99_latency_us": 1e6 * pct[99.0],

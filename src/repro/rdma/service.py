@@ -15,30 +15,127 @@ the legacy per-connection engine threads:
   * partial results are merged **in subrequest issue order**, in float64 over
     exactly-representable float32 rows.
 
+``lookup_async`` is the pipelined form of the same contract: it posts the
+subrequests and returns a future-like ``LookupHandle`` whose ``wait()``
+performs the deferred issue-order merge — so a serving loop can post batch
+N+1's lookup while batch N's dense stage runs (cross-batch pipelining,
+``runtime.serving.FlexEMRServer``).  ``wait`` also arms the straggler
+hedge: a batch still unfinished after ``hedge_timeout`` has its unfinished
+subrequests re-issued as duplicates on different engine threads
+(cancel-the-loser, ``RdmaEnginePool.hedge``) instead of being re-executed
+ranker-side.
+
 Invariants:
   * Result invariance: pooled outputs are bit-equal to the legacy
     ``HostLookupService`` and across every pool configuration (thread count,
-    chunk size, stealing on/off).  The engine changes *when subrequests
-    move*, never *what lookups return* — the same contract the hotcache and
-    prefetch tiers (repro.hotcache / repro.prefetch) are built on, and it
-    rests on the same precondition: per-bag sums of f32 rows must be exact
-    in the f64 accumulator (true while a bag's values span < ~29 binades,
-    as embedding tables do; values engineered to straddle >53 bits of
-    exponent could differ in the last ulp across chunk boundaries, exactly
-    as they already could across the cache/wire split).
+    chunk size, stealing on/off, affinity table, pipeline depth, hedging).
+    The engine changes *when subrequests move*, never *what lookups
+    return* — the same contract the hotcache and prefetch tiers
+    (repro.hotcache / repro.prefetch) are built on, and it rests on the
+    same precondition: per-bag sums of f32 rows must be exact in the f64
+    accumulator (true while a bag's values span < ~29 binades, as embedding
+    tables do; values engineered to straddle >53 bits of exponent could
+    differ in the last ulp across chunk boundaries, exactly as they already
+    could across the cache/wire split).  A hedged duplicate computes the
+    identical partial and only the first completion settles the slot, so
+    hedging cannot perturb the merge either.
   * ``network_bytes`` keeps pricing the per-(server, bag) partials of Fig 4
     so cache/prefetch A/Bs stay comparable across engines; the verbs timing
     model prices the finer per-subrequest partials it actually moves.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core.flow_control import CreditGate
 from repro.core.lookup_engine import HostLookupService
 from repro.core.sharding import FusedTables
-from repro.rdma.engine import RdmaEnginePool
+from repro.rdma.engine import BatchHandle, RdmaEnginePool
 from repro.rdma.verbs import LookupSubrequest, VerbsTiming
+
+
+class LookupHandle:
+    """Future of one pooled lookup: subrequests posted, merge deferred.
+
+    ``wait()`` blocks for the batch, optionally hedging stragglers through
+    the pool, merges the partials in subrequest issue order (float64 — the
+    schedule-independent merge), and finalizes mean normalization.  It is
+    idempotent: the merged result is cached, so ``wait`` may be called from
+    a pipeline-drain path and again by the retiring caller.
+    """
+
+    def __init__(
+        self,
+        service: "PooledLookupService",
+        batch: BatchHandle | None,
+        shape: tuple[int, int, int],
+        mask: np.ndarray,
+        mean_normalize: bool,
+        hedge_timeout: float | None = None,
+    ):
+        self._service = service
+        self._batch = batch
+        self._shape = shape  # (B, F, D)
+        self._mask = mask
+        self._mean_normalize = mean_normalize
+        self.hedge_timeout = hedge_timeout
+        self.hedged = 0  # duplicate WRs this handle re-issued
+        self._hedge_armed = False  # a wait() retry must not re-duplicate
+        self._out: np.ndarray | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._batch is None or self._batch.done
+
+    @property
+    def virtual_latency(self) -> float:
+        return 0.0 if self._batch is None else self._batch.virtual_latency
+
+    def wait(self, timeout: float | None = None) -> np.ndarray:
+        """[B, F, D] pooled result; hedges stragglers, merges in issue order."""
+        if self._out is not None:
+            return self._out
+        B, F, D = self._shape
+        out = np.zeros((B * F, D), np.float64)
+        bh = self._batch
+        if bh is not None:
+            t0 = time.monotonic()
+            if (
+                self.hedge_timeout is not None
+                and not self._hedge_armed
+                and not bh._done.wait(self.hedge_timeout)
+            ):
+                # Straggler: duplicate the unfinished WRs onto other engine
+                # threads; first completion wins (cancel-the-loser).  Armed
+                # at most once — a wait() retried after a TimeoutError must
+                # not stack further duplicates behind the first set.
+                self._hedge_armed = True
+                self.hedged += self._service.pool.hedge(bh)
+            # The hedge-arming wait spends part of the caller's budget.
+            remaining = (
+                None if timeout is None
+                else max(0.0, timeout - (time.monotonic() - t0))
+            )
+            try:
+                results = bh.wait(remaining)
+            finally:
+                # Advance the closed-loop frontier even when the batch
+                # failed or timed out: its virtual end is fixed at submit,
+                # and a stale frontier would price every later lookup as
+                # overlapped with this one.
+                self._service.pool.sync_frontier(bh)
+            for res in results:  # issue order: deterministic f64 merge
+                if self._service.pushdown:
+                    out += res  # global combine of partial pools (fig 4b)
+                else:
+                    rows, bags = res  # ranker-side pooling (fig 4a)
+                    np.add.at(out, bags, rows)
+        self._out = self._service._finalize(
+            out.reshape(B, F, D), self._mask, self._mean_normalize
+        )
+        return self._out
 
 
 class PooledLookupService(HostLookupService):
@@ -56,6 +153,7 @@ class PooledLookupService(HostLookupService):
         work_stealing: bool = True,
         max_rows_per_subrequest: int = 64,
         gate: CreditGate | None = None,
+        emulate_wire: bool = False,
     ):
         self._init_core(tables, table_array, pushdown)
         if max_rows_per_subrequest <= 0:
@@ -69,6 +167,7 @@ class PooledLookupService(HostLookupService):
             max_inflight=max_inflight,
             work_stealing=work_stealing,
             gate=gate,
+            emulate_wire=emulate_wire,
         )
 
     # ----------------------------------------------------------------- lookup
@@ -107,6 +206,31 @@ class PooledLookupService(HostLookupService):
                 )
         return subreqs
 
+    def lookup_async(
+        self,
+        indices: np.ndarray,
+        mask: np.ndarray,
+        mean_normalize: bool = True,
+        hedge_timeout: float | None = None,
+    ) -> LookupHandle:
+        """Post one [B,F,nnz] lookup's subrequests; return a ``LookupHandle``.
+
+        The fan-out plan and chunking are identical to ``lookup`` — only
+        the merge is deferred to ``handle.wait()``, so the engine threads
+        chew the gathers while the caller does something else (the dense
+        stage of the previous batch, cache probes of the next one...).
+        ``hedge_timeout`` arms the pool-side straggler hedge at wait time.
+        """
+        B, F, _ = indices.shape
+        fused, bag, bounds, num_bags, D = self._plan_fanout(indices, mask)
+        entry = 4 + D * self.servers[0].rows.dtype.itemsize
+        subreqs = self._shard_subrequests(fused, bag, bounds, num_bags, entry)
+        batch = self.pool.submit(subreqs) if subreqs else None
+        return LookupHandle(
+            self, batch, (B, F, D), mask, mean_normalize,
+            hedge_timeout=hedge_timeout,
+        )
+
     def lookup(
         self,
         indices: np.ndarray,
@@ -118,22 +242,19 @@ class PooledLookupService(HostLookupService):
         Same contract as the legacy service (mean_normalize=False returns
         float64 per-bag sums for exact tier merging); the merge runs in
         subrequest issue order so the result is schedule-independent.
+        Closed-loop form of ``lookup_async`` — post, wait, merge.
         """
-        B, F, _ = indices.shape
-        fused, bag, bounds, num_bags, D = self._plan_fanout(indices, mask)
-        entry = 4 + D * self.servers[0].rows.dtype.itemsize
-        subreqs = self._shard_subrequests(fused, bag, bounds, num_bags, entry)
+        return self.lookup_async(indices, mask, mean_normalize).wait()
 
-        out = np.zeros((num_bags, D), np.float64)
-        if subreqs:
-            results, _ = self.pool.execute(subreqs)
-            for res in results:  # issue order: deterministic f64 merge
-                if self.pushdown:
-                    out += res  # global combine of partial pools (fig 4b)
-                else:
-                    rows, bags = res  # ranker-side pooling (fig 4a)
-                    np.add.at(out, bags, rows)
-        return self._finalize(out.reshape(B, F, D), mask, mean_normalize)
+    # --------------------------------------------------------------- affinity
+
+    def set_shard_affinity(self, shard_heat) -> None:
+        """Skew-aware dealing: install a heat-weighted shard -> engine-thread
+        table (``verbs.heat_affinity`` LPT over the controller's per-shard
+        heat) so hot shards spread across threads *before* work stealing has
+        to rescue them.  ``None`` (or an all-zero heat) falls back to the
+        ``shard % T`` modulo dealing."""
+        self.pool.set_heat(shard_heat)
 
     # ------------------------------------------------------------------ stats
 

@@ -22,8 +22,18 @@ The model, in verbs vocabulary:
     work-stealing spreads its chunks across threads (and thus across QPs).
   * The bounded in-flight window (``max_inflight``) models the §3.2 credit
     loop: a post whose window is full waits for the earliest outstanding
-    completion — ``core.flow_control.CreditGate`` enforces the same bound on
+    completion *plus the credit-return flight time* (``t_credit_return``,
+    priced from ``core.flow_control.CreditedConnection`` — the window is
+    reopened by a credit grant travelling back, not by the completion
+    itself).  ``core.flow_control.CreditGate`` enforces the same bound on
     the real threads.
+  * ``VerbsState`` carries the per-engine clocks, QP wire horizons, and the
+    outstanding-credit heap *across batches*: a batch posted while the
+    previous one is still on the wire (cross-batch pipelining) is priced
+    against busy QPs and a part-consumed credit window, not a fresh t=0.
+    The state's ``now`` frontier only advances when a caller actually
+    blocks on a batch (``RdmaEnginePool.sync_frontier``), so back-to-back
+    submissions between waits are modeled as overlapped.
 
 ``plan_schedule`` runs this model as a deterministic discrete-event
 simulation over per-thread virtual clocks.  It decides which engine posts
@@ -37,10 +47,14 @@ run.
 Invariants:
   * Scheduling never reorders the *merge*: results are combined in subrequest
     issue order by the service layer, so pooled outputs are bit-equal across
-    thread counts, chunk sizes, and stealing decisions.
+    thread counts, chunk sizes, stealing decisions, affinity tables, and
+    pipeline depths.
   * ``plan_schedule`` touches only timing fields (``engine``, ``stolen``,
     ``v_complete``); row data flows exclusively through the real execution
     path.
+  * With a shared ``VerbsState`` whose frontier was synced past the previous
+    batch's completion, a batch prices identically to a fresh state: the
+    closed-loop (depth-1) numbers are unchanged by the carry-over.
 """
 from __future__ import annotations
 
@@ -65,6 +79,18 @@ class VerbsTiming:
     t_steal: float = 0.25e-6  # deque CAS + cacheline bounce on a steal
     t_server: float = 3.0e-6  # embedding-server processing per WR
     wire_bps: float = 100e9 / 8  # response payload bytes/s
+    # Credit-return flight time charged to a post blocked on the in-flight
+    # window: the window reopens when the credit *arrives back*, not when
+    # the response completes.  Default = CreditedConnection's priority
+    # channel (credit_size 16B at 1e-8 s/B); from_flow_control derives it
+    # from a configured connection.  0 restores the free-credit model.
+    t_credit_return: float = 0.16e-6
+
+    @classmethod
+    def from_flow_control(cls, conn, **kw) -> "VerbsTiming":
+        """Couple the window price to a ``flow_control.CreditedConnection``:
+        blocked posts pay that connection's credit-return latency."""
+        return cls(t_credit_return=conn.credit_return_latency(), **kw)
 
 
 @dataclasses.dataclass
@@ -89,10 +115,66 @@ class SchedulePlan:
     """Output of plan_schedule for one batch of subrequests."""
 
     assignments: list  # assignments[tid] = ordered [LookupSubrequest]
-    makespan: float  # virtual batch latency (max completion)
-    busy: list  # per-thread posting occupancy (seconds, virtual)
+    makespan: float  # virtual batch latency (max completion - arrival)
+    busy: list  # per-thread posting occupancy this batch (seconds, virtual)
     steals: int  # WRs executed by a thread other than their affinity owner
     doorbells: int  # doorbell batches rung
+    arrival: float = 0.0  # absolute virtual submission time
+    end: float = 0.0  # absolute virtual completion of the slowest WR
+
+
+@dataclasses.dataclass
+class VerbsState:
+    """Cross-batch virtual timing state of one engine pool.
+
+    Survives between ``plan_schedule`` calls so a batch posted while an
+    earlier one is still in flight contends with it for engine clocks, QP
+    wire serialization, and window credits — the timing substrate of
+    cross-batch pipelining.  ``now`` is the submission frontier: batches
+    arrive at ``now``, and ``sync`` advances it to a completed batch's end
+    (the closed-loop synchronization point).  A fresh state (or a frontier
+    synced past every prior completion) degenerates to the independent
+    per-batch model.
+    """
+
+    clock: list  # per-engine absolute posting clocks
+    qp_busy: dict  # (engine, server) -> absolute wire-free time
+    inflight: list  # absolute completion-time heap == outstanding credits
+    now: float = 0.0  # submission frontier (absolute)
+
+    @classmethod
+    def fresh(cls, num_engines: int) -> "VerbsState":
+        return cls(clock=[0.0] * num_engines, qp_busy={}, inflight=[], now=0.0)
+
+    def sync(self, end: float) -> None:
+        """Advance the frontier to a batch the caller actually waited on."""
+        self.now = max(self.now, end)
+
+
+def heat_affinity(shard_heat, num_threads: int) -> np.ndarray:
+    """Heat-weighted shard -> engine-thread dealing table (LPT greedy).
+
+    Shards are dealt hottest-first to the least-loaded thread, so two hot
+    shards never share a thread by modulo accident and work stealing only
+    has to rescue *unpredicted* skew, not the skew the controller already
+    measured.  Deterministic (stable sort, lowest-tid tie break); falls
+    back to ``shard % T`` when there is no heat signal at all.
+    """
+    heat = np.asarray(shard_heat, np.float64)
+    if num_threads <= 0:
+        raise ValueError("num_threads must be positive")
+    if heat.ndim != 1 or len(heat) == 0 or not np.isfinite(heat).all() \
+            or heat.min() < 0 or heat.sum() <= 0:
+        return np.arange(max(len(heat), 1)) % num_threads
+    order = np.argsort(-heat, kind="stable")
+    load = np.zeros(num_threads, np.float64)
+    aff = np.zeros(len(heat), np.int64)
+    eps = float(heat.sum()) * 1e-12  # round-robin the all-cold tail
+    for s in order:
+        t = int(np.argmin(load))
+        aff[int(s)] = t
+        load[t] += heat[int(s)] + eps
+    return aff
 
 
 def plan_schedule(
@@ -102,36 +184,54 @@ def plan_schedule(
     doorbell_batch: int = 8,
     max_inflight: int = 32,
     work_stealing: bool = True,
+    affinity: np.ndarray | None = None,
+    state: VerbsState | None = None,
 ) -> SchedulePlan:
     """Deterministic virtual-time schedule of one batch's work requests.
 
-    Affinity dealing (shard -> thread ``shard % T``) seeds per-thread FIFO
-    queues; the event loop then advances whichever engine has the smallest
-    virtual clock.  An engine with local work posts a doorbell batch from its
-    queue head; an idle engine steals up to half the longest victim queue
-    from the *tail* (classic work-stealing order, so the owner and the thief
-    never contend for the same end).  Ties break on thread id, making the
-    schedule a pure function of the subrequest list.
+    Affinity dealing (``affinity[shard]`` when a heat-weighted table is
+    installed, ``shard % T`` otherwise) seeds per-thread FIFO queues; the
+    event loop then advances whichever engine has the smallest virtual
+    clock.  An engine with local work posts a doorbell batch from its queue
+    head; an idle engine steals up to half the longest victim queue from the
+    *tail* (classic work-stealing order, so the owner and the thief never
+    contend for the same end).  Ties break on thread id, making the schedule
+    a pure function of the subrequest list and the incoming ``state``.
+
+    ``state`` (a ``VerbsState``) is mutated in place: engine clocks, QP wire
+    horizons, and the outstanding-credit heap carry into the next batch, and
+    this batch arrives at ``state.now``.  ``makespan`` is the batch latency
+    relative to that arrival; ``end`` is the absolute completion.
     """
     if num_engines <= 0:
         raise ValueError("num_engines must be positive")
     # A doorbell group must fit the credit window or its own post could
     # never be admitted (same clamp RdmaEnginePool applies).
     doorbell_batch = max(1, min(doorbell_batch, max_inflight))
+    if state is None:
+        state = VerbsState.fresh(num_engines)
+    arrival = state.now
     queues: list[collections.deque] = [
         collections.deque() for _ in range(num_engines)
     ]
     for r in subreqs:
-        queues[r.server % num_engines].append(r)
+        if affinity is not None and 0 <= r.server < len(affinity):
+            tid0 = int(affinity[r.server]) % num_engines
+        else:
+            tid0 = r.server % num_engines
+        queues[tid0].append(r)
 
-    clock = [0.0] * num_engines
+    # An engine idle since before this batch arrived starts at the arrival;
+    # one still posting the previous batch keeps its (busier) clock.
+    clock = [max(c, arrival) for c in state.clock]
+    retired_clock = list(clock)  # real clocks behind any inf retirement
     busy = [0.0] * num_engines
-    qp_busy: dict[tuple[int, int], float] = {}  # (engine, server) -> wire free
-    inflight: list[float] = []  # completion-time heap == outstanding credits
+    qp_busy = state.qp_busy  # (engine, server) -> wire free, carried over
+    inflight = state.inflight  # completion-time heap == outstanding credits
     assignments: list[list] = [[] for _ in range(num_engines)]
     steals = 0
     doorbells = 0
-    makespan = 0.0
+    end = arrival
 
     while any(queues):
         tid = min(range(num_engines), key=lambda t: (clock[t], t))
@@ -156,16 +256,29 @@ def plan_schedule(
             for r in group:
                 r.stolen = True
         else:
-            clock[tid] = float("inf")  # drained and may not steal: retire
+            # Drained and may not steal: retire from THIS batch's event
+            # loop, remembering the real end-of-posting clock so the
+            # carry-over prices the engine's actual availability.
+            retired_clock[tid] = clock[tid]
+            clock[tid] = float("inf")
             continue
 
         # Credit window: block the post until the WHOLE doorbell group fits,
         # mirroring CreditGate.acquire(len(group)) on the real threads.
+        # Credits that already returned are free; a post that must *wait*
+        # for one pays the credit-return flight on top of the completion
+        # (the window reopens when the grant arrives, not when the response
+        # lands) — the flow_control.CreditedConnection coupling.
         start = clock[tid]
-        while len(inflight) + len(group) > max_inflight:
-            start = max(start, heapq.heappop(inflight))
-        while inflight and inflight[0] <= start:
+        # A credit is usable once its grant has FLOWN back, not at the
+        # response completion itself — the same pricing the blocked loop
+        # below applies, so the free/blocked boundary is consistent.
+        while inflight and inflight[0] + timing.t_credit_return <= start:
             heapq.heappop(inflight)
+        while len(inflight) + len(group) > max_inflight:
+            start = max(
+                start, heapq.heappop(inflight) + timing.t_credit_return
+            )
 
         t = start + timing.t_doorbell
         doorbells += 1
@@ -179,14 +292,23 @@ def plan_schedule(
             heapq.heappush(inflight, r.v_complete)
             r.engine = tid
             assignments[tid].append(r)
-            makespan = max(makespan, r.v_complete)
+            end = max(end, r.v_complete)
         busy[tid] += t - start
         clock[tid] = t
 
+    # Persist the carry-over.  Inf markers from stealing-off retirement are
+    # local to this batch's event loop: the engine is merely idle next
+    # batch, available from the point it actually finished posting.
+    state.clock = [
+        retired_clock[t] if clock[t] == float("inf") else clock[t]
+        for t in range(num_engines)
+    ]
     return SchedulePlan(
         assignments=assignments,
-        makespan=makespan,
+        makespan=end - arrival,
         busy=busy,
         steals=steals,
         doorbells=doorbells,
+        arrival=arrival,
+        end=end,
     )

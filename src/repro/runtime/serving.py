@@ -7,19 +7,36 @@ together at host level.
   PooledLookupService                — §3.2 multi-threaded rdma engine pool
                                        (engine="legacy" keeps the old
                                        per-connection HostLookupService)
-  hedged subrequests                 — straggler mitigation: a lookup that
-                                       exceeds `hedge_timeout` is re-executed
-                                       ranker-side from the authoritative shard
+  cross-batch pipeline               — §3.2 follow-on: up to `pipeline_depth`
+                                       batches in flight; batch N+1's cache
+                                       probe + miss posting overlaps batch
+                                       N's remote fetch and dense stage
+  hedged subrequests                 — straggler mitigation: a lookup still
+                                       unfinished after `hedge_timeout` is
+                                       re-issued as duplicate subrequests on
+                                       other engine threads through the pool
+                                       (cancel-the-loser); the legacy engine
+                                       keeps the ranker-side re-execution
   dense model (jit)                  — the "ranker GPU" stage
 
-The same class drives examples/serve_dlrm.py and the Fig-7 benchmark.
+The pipeline is an explicit admit/retire loop: ``step`` first *admits*
+batches (pad + tiered ``lookup_begin``) until ``pipeline_depth`` are in
+flight, then *retires* the oldest (wait on its miss handle, dense stage,
+metrics, controller).  Depth 1 is the closed-loop pre-pipeline behaviour.
+Outputs are bit-equal at any depth and with hedging on or off: the tier
+merges in float64 over exactly-representable f32 rows and the pool merges
+in subrequest issue order, so *when* bytes move never changes *what* scores
+come back.
+
+The same class drives examples/serve_dlrm.py and the pipeline benchmark.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -41,8 +58,8 @@ class ServeMetrics:
     requests: int = 0
     cache_hits: int = 0
     lookups: int = 0
-    hedges: int = 0
-    lookup_seconds: float = 0.0
+    hedges: int = 0  # batches whose miss lookup was hedged
+    lookup_seconds: float = 0.0  # time the ranker thread STALLED on lookups
     dense_seconds: float = 0.0
     bytes_no_cache: int = 0  # wire bytes a cache-less deployment would move
     bytes_network: int = 0  # wire bytes actually moved (misses only)
@@ -87,6 +104,16 @@ class ServeMetrics:
         }
 
 
+class _InflightBatch(NamedTuple):
+    """One admitted-but-unretired batch in the serving pipeline."""
+
+    bucket: int
+    reqs: list
+    batch: dict
+    pending: object  # PendingTieredLookup (miss handle + deferred merge)
+    t_admit: float
+
+
 class FlexEMRServer:
     """Disaggregated serving: host-DRAM embedding servers + jit'd dense NN."""
 
@@ -98,11 +125,22 @@ class FlexEMRServer:
         controller: AdaptiveCacheController | None = None,
         num_engines: int = 4,
         pushdown: bool = True,
-        hedge_timeout: float = 0.05,
+        hedge_timeout: float | None = 0.05,
         cache_refresh_every: int = 16,
         prefetcher=None,  # repro.prefetch.PrefetchEngine | None
         engine: str = "pooled",  # 'pooled' (§3.2 rdma pool) | 'legacy'
+        pipeline_depth: int = 2,  # batches in flight (1 = closed loop)
+        batcher: BucketBatcher | None = None,
+        track_bytes: bool = True,  # False: skip wire-byte accounting (an
+        # O(batch) np.unique per batch on the serving thread — measurable
+        # against a pipelined lookup; byte metrics then read 0)
+        timing=None,  # rdma.VerbsTiming override for the pooled engine
+        emulate_wire: bool = False,  # pooled engine sleeps each WR's
+        # virtual wire+server time for real: lookups become latency-bound
+        # (the paper's regime) so pipelining is measurable without an RNIC
     ):
+        if pipeline_depth <= 0:
+            raise ValueError("pipeline_depth must be positive")
         self.cfg = cfg
         self.params = params
         self.tables = tables
@@ -113,7 +151,8 @@ class FlexEMRServer:
             # (per-thread QPs, work stealing, doorbell batching, credit
             # window); num_engines becomes the pool's thread count.
             self.service = PooledLookupService(
-                tables, table_np, num_threads=num_engines, pushdown=pushdown
+                tables, table_np, num_threads=num_engines, pushdown=pushdown,
+                timing=timing, emulate_wire=emulate_wire,
             )
         elif engine == "legacy":
             self.service = HostLookupService(
@@ -125,23 +164,35 @@ class FlexEMRServer:
         self.controller = controller
         self.hedge_timeout = hedge_timeout
         self.cache_refresh_every = cache_refresh_every
-        self.batcher = BucketBatcher()
+        self.pipeline_depth = pipeline_depth
+        self.batcher = batcher or BucketBatcher()
         self.metrics = ServeMetrics()
         self.prefetcher = prefetcher
         # repro.hotcache tiered front end over the lookup service.  The hash
         # cache starts empty (0 slots) until the controller's first plan;
         # refresh_every=0: the controller owns the swap-in schedule, not the
-        # tier's own LFU loop.  The hedged remote keeps straggler mitigation.
-        # With a prefetcher, the tier mines co-occurrence and attributes
-        # prefetch hits; the piggyback fetch itself rides the plan swap-in
-        # (_apply_cache_plan), since the controller owns that schedule here.
+        # tier's own LFU loop.  With a prefetcher, the tier mines
+        # co-occurrence and attributes prefetch hits; the piggyback fetch
+        # itself rides the plan swap-in (_apply_cache_plan), since the
+        # controller owns that schedule here.
+        # Straggler mitigation: on the pool, the miss tier posts async and
+        # hedges *through the pool* (duplicate subrequests on other engine
+        # threads, cancel-the-loser); the legacy engine keeps the ranker-side
+        # re-execution from the authoritative shard copy.
+        if engine == "pooled":
+            tier_remote = {"remote_async_fn": self._pool_remote_async}
+        else:
+            tier_remote = {"remote_fn": self._hedged_remote}
         self._tiered = TieredLookupService(
             self.service,
             num_slots=0,
             refresh_every=0,
-            remote_fn=self._hedged_remote,
             prefetcher=prefetcher,
+            track_bytes=track_bytes,
+            **tier_remote,
         )
+        # The cross-batch pipeline: _InflightBatch entries, oldest first.
+        self._pipeline: collections.deque = collections.deque()
         self._plan_swap_in_bytes = 0
         self._dense = jax.jit(self._dense_fn)
         self._offsets = tables.field_offsets_array()
@@ -168,8 +219,21 @@ class FlexEMRServer:
 
     # ---------------------------------------------------------------- lookup
 
+    def _pool_remote_async(self, indices: np.ndarray, cold_mask: np.ndarray):
+        """Miss-tier executor on the §3.2 engine pool: posts the subrequests
+        and returns the LookupHandle.  The straggler hedge arms at wait():
+        a batch still unfinished after `hedge_timeout` has its unfinished
+        subrequests duplicated onto other engine threads and the losers
+        cancelled — no ranker-side re-execution, no double-count."""
+        return self.service.lookup_async(
+            indices, cold_mask, mean_normalize=False,
+            hedge_timeout=self.hedge_timeout,
+        )
+
     def _hedged_remote(self, indices: np.ndarray, cold_mask: np.ndarray):
-        """Miss-tier executor with straggler hedging: returns [B,F,D] SUMS."""
+        """Legacy miss-tier executor with ranker-side straggler hedging:
+        returns [B,F,D] SUMS (the pooled engine hedges through the pool
+        instead — see _pool_remote_async)."""
         t0 = time.perf_counter()
         done = threading.Event()
         result: list = [None]
@@ -196,11 +260,7 @@ class FlexEMRServer:
         self.metrics.lookup_seconds += time.perf_counter() - t0
         return out
 
-    def _lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
-        """Tiered lookup: hotcache probe, miss subrequests, ranker-side hedge
-        (all inside TieredLookupService, with _hedged_remote as the miss
-        tier).  Mean fields are normalized once over the full counts."""
-        out = self._tiered.lookup(indices, mask)
+    def _sync_tier_metrics(self) -> None:
         s = self._tiered.stats
         self.metrics.lookups = s.lookups
         self.metrics.cache_hits = s.hits
@@ -214,6 +274,20 @@ class FlexEMRServer:
             # own counters (the tier's only cover self-driven refreshes).
             self.metrics.prefetch_issued = self.prefetcher.stats.issued
             self.metrics.bytes_prefetch = self.prefetcher.stats.bytes_prefetch
+
+    def _lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Closed-loop tiered lookup (probe + miss + merge in one call) —
+        the non-pipelined entry used by tests and direct callers.  Accounts
+        the same lookup-time/hedge metrics the pipelined retire path does
+        (the legacy engine's _hedged_remote times itself)."""
+        t0 = time.perf_counter()
+        pending = self._tiered.lookup_begin(indices, mask)
+        out = pending.wait()
+        if self.engine == "pooled":
+            self.metrics.lookup_seconds += time.perf_counter() - t0
+            if pending.hedged:
+                self.metrics.hedges += 1
+        self._sync_tier_metrics()
         return out
 
     # --------------------------------------------------------------- serving
@@ -222,9 +296,32 @@ class FlexEMRServer:
         return self.batcher.submit(payload)
 
     def step(self) -> dict | None:
+        """Admit batches until `pipeline_depth` are in flight, then retire
+        the oldest: the explicit cross-batch pipeline.  Batch N+1's padding,
+        cache probe, and miss *posting* all happen before batch N's dense
+        stage runs, so the engine pool fetches N+1's misses while the ranker
+        is in the dense NN (and, at admit time, while N is still on the
+        wire).  Returns the oldest batch's result, or None when idle."""
+        while len(self._pipeline) < self.pipeline_depth:
+            if self._pipeline and self._pipeline[0].pending.done:
+                # The oldest batch is already merged-ready: retire it now
+                # rather than blocking in the batcher poll for an admit —
+                # under sparse traffic that wait would add dead time to a
+                # result that is just sitting there.  (While the oldest is
+                # still in flight, the blocking poll is itself overlapped
+                # work, so keep filling.)
+                break
+            if not self._admit_next():
+                break
+        if not self._pipeline:
+            return None
+        return self._retire_oldest()
+
+    def _admit_next(self) -> bool:
+        """Poll + pad one batch and post its tiered lookup (probe phase)."""
         polled = self.batcher.poll()
         if polled is None:
-            return None
+            return False
         bucket, reqs = polled
         t0 = time.perf_counter()
         F, NNZ = self.cfg.num_fields, self.cfg.max_nnz
@@ -237,7 +334,25 @@ class FlexEMRServer:
                 "dense": ((self.cfg.n_dense,), np.float32),
             },
         )
-        pooled = self._lookup(batch["indices"], batch["mask"])
+        pending = self._tiered.lookup_begin(batch["indices"], batch["mask"])
+        self._pipeline.append(
+            _InflightBatch(bucket, reqs, batch, pending, t0)
+        )
+        return True
+
+    def _retire_oldest(self) -> dict:
+        """Wait on the oldest in-flight batch, run its dense stage, account."""
+        bucket, reqs, batch, pending, t0 = self._pipeline.popleft()
+        t_wait = time.perf_counter()
+        pooled = pending.wait()
+        if self.engine == "pooled":
+            # Ranker-thread stall on the miss path: with the pipeline full
+            # this is what's LEFT of lookup latency after the overlap (the
+            # legacy hedge path accounts its own full lookup time instead).
+            self.metrics.lookup_seconds += time.perf_counter() - t_wait
+            if pending.hedged:
+                self.metrics.hedges += 1
+        self._sync_tier_metrics()
         t1 = time.perf_counter()
         scores = np.asarray(
             self._dense(jnp.asarray(pooled), jnp.asarray(batch["dense"]))
@@ -290,14 +405,38 @@ class FlexEMRServer:
                 self.prefetcher.set_byte_budget(plan.prefetch_budget_bytes)
                 self.prefetcher.piggyback(ids[~already], cache, self.service)
                 self.prefetcher.decay()
+        if hasattr(self.service, "set_shard_affinity"):
+            # Skew-aware dealing (§3.2 follow-on): feed the controller's
+            # per-shard heat into the pool's shard->thread table so hot
+            # shards spread across engine threads *before* work stealing
+            # has to rescue them.  No heat yet -> keep the shard % T deal.
+            heat = self.controller.shard_heat(
+                self.tables.rows_per_shard, self.tables.num_shards
+            )
+            self.service.set_shard_affinity(heat if heat.sum() > 0 else None)
         logger.info("cache plan applied: %s", plan.reason)
 
     def engine_summary(self) -> dict | None:
         """repro.rdma pool stats (virtual p50/p99, utilization, steals,
-        credit window) when serving on the pooled engine; None on legacy."""
+        hedges + cancellations, credit window) when serving on the pooled
+        engine; None on legacy."""
         if hasattr(self.service, "engine_summary"):
             return self.service.engine_summary()
         return None
 
     def close(self):
-        self.service.close()
+        """Drain the pipeline (in-flight lookups complete and merge — never
+        dropped mid-wire), then shut the engine down.  A batch that FAILED
+        in flight is logged, not raised: close must always reach
+        service.close() or the engine-pool threads leak."""
+        try:
+            while self._pipeline:
+                entry = self._pipeline.popleft()
+                try:
+                    entry.pending.wait()
+                except Exception:  # noqa: BLE001
+                    logger.exception(
+                        "pipeline drain: in-flight batch failed"
+                    )
+        finally:
+            self.service.close()

@@ -13,8 +13,14 @@ skew, on hardware this container does not have.  The model:
     extra `t_contention` (the cross-thread lock of Fig 6).
   * The server answers after `t_server + bytes * t_wire`.
   * A batch completes when its slowest subrequest completes (tail-sensitive,
-    §3.2), at which point the next batch for that slot is issued (closed
-    loop with `inflight` outstanding batches).
+    §3.2).  With `t_dense > 0` the completed batch then runs its dense
+    stage, serialized on the single ranker thread; its pipeline slot frees
+    only when the dense stage retires.  The closed loop keeps `inflight`
+    batches outstanding — that is exactly the serving loop's
+    `pipeline_depth`, so the same model prices cross-batch pipelining:
+    engine/unit/wire state persists across batches, and at depth >= 2 the
+    engines fetch batch N+1 while the ranker is dense-busy with batch N.
+    `t_dense = 0` (default) recovers the pure lookup microbenchmark.
 
 Calibration: t_post=1.0us, t_contention=0.35us (verbs lock handoff), t_server
 =3us, 100 Gbps wire.  With 4 engines / 4 units / 16 servers this yields
@@ -39,8 +45,12 @@ class SimConfig:
     n_units: int = 4
     mapping_aware: bool = True
     migration: bool = False
-    inflight: int = 8  # outstanding lookup batches
+    inflight: int = 8  # outstanding lookup batches == serving pipeline_depth
     n_batches: int = 2000
+    # Ranker dense-NN stage per batch, serialized on the ranker thread; a
+    # batch's pipeline slot frees when its dense stage retires.  0 = lookup
+    # microbenchmark (no ranker stage modeled).
+    t_dense: float = 0.0
     bytes_per_subrequest: float = 8192.0  # pooled partials (fig 4b)
     t_post: float = 1.0e-6
     t_contention: float = 0.35e-6  # calibrated: lands naive/aware at ~2.3-2.5x,
@@ -174,10 +184,18 @@ class LookupSimulator:
             issued += 1
         completed = 0
         last_migrate = 0.0
+        ranker_free = 0.0  # single ranker thread: dense stages serialize
         while events:
             t_done, bid = heapq.heappop(events)
             completed += 1
-            now = t_done
+            if cfg.t_dense > 0.0:
+                # Retire = lookup completion + this batch's dense stage on
+                # the (serialized) ranker; the freed slot admits the next
+                # batch — the engines already worked through the dense gap.
+                ranker_free = max(t_done, ranker_free) + cfg.t_dense
+                now = ranker_free
+            else:
+                now = t_done
             if cfg.migration and now - last_migrate > cfg.migrate_every:
                 self._migrate()
                 last_migrate = now
@@ -185,7 +203,7 @@ class LookupSimulator:
                 c = issue_batch(now)
                 heapq.heappush(events, (c, issued))
                 issued += 1
-        makespan = now
+        makespan = max(now, ranker_free)
         utilization = engine_busy / max(makespan, 1e-12)
         return {
             "throughput_batches_per_s": cfg.n_batches / makespan,
@@ -342,6 +360,36 @@ def compare_prefetch(
         out[accs[0]]["throughput_batches_per_s"] / base
         if accs[0] == 0.0
         else float("nan")
+    )
+    return out
+
+
+def compare_pipeline(
+    depths=(1, 2, 4), t_dense: float = 30e-6, **overrides
+) -> dict:
+    """Cross-batch pipelining sweep: serving throughput vs pipeline depth.
+
+    ``inflight`` (the model's outstanding-batch count) IS the serving
+    loop's ``pipeline_depth``: at depth 1 the ranker's dense stage
+    (``t_dense``) strictly alternates with the lookup fan-out; at depth 2+
+    the engines fetch batch N+1's misses while the ranker is dense-busy
+    with batch N.  Returns the per-depth run dicts plus ``speedup`` (widest
+    depth over depth min) and ``overlap_utilization_gain`` (mean engine
+    utilization recovered by pipelining) — the quantities the pipeline
+    bench compares against the real engine pool's measured utilization.
+    """
+    ds = sorted(int(d) for d in depths)
+    out: dict = {}
+    for d in ds:
+        cfg = SimConfig(inflight=d, t_dense=t_dense, **overrides)
+        out[d] = LookupSimulator(cfg).run()
+    out["speedup"] = (
+        out[ds[-1]]["throughput_batches_per_s"]
+        / out[ds[0]]["throughput_batches_per_s"]
+    )
+    out["overlap_utilization_gain"] = float(
+        np.mean(out[ds[-1]]["engine_utilization"])
+        - np.mean(out[ds[0]]["engine_utilization"])
     )
     return out
 

@@ -1,0 +1,519 @@
+"""Cross-batch pipelined serving (§3.2 follow-on): async lookup handles,
+the staged FlexEMRServer pipeline, pool-side hedging, skew-aware affinity,
+credit-latency coupling, and the cross-batch virtual timing state.
+
+The load-bearing contracts:
+  * bit-equality — scores are identical at every ``pipeline_depth`` and
+    with hedging on or off (forced included): the pipeline changes *when*
+    bytes move, never *what* comes back;
+  * hedge cancel-the-loser — a duplicate subrequest's completion can never
+    corrupt the merge (first writer settles the slot, losers are dropped);
+  * clean shutdown with a full pipeline in flight;
+  * heat-weighted dealing spreads hot shards across engine threads where
+    ``shard % T`` would collide them;
+  * blocked posts are charged the flow_control credit-return latency;
+  * ``VerbsState`` carries QP/credit state across batches, and a synced
+    frontier restores the independent per-batch model;
+  * the simulator's pipelined closed loop predicts the overlap.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive_cache import AdaptiveCacheController, MemoryModel
+from repro.core.flow_control import CreditedConnection
+from repro.core.lookup_engine import CompletedLookup, HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data import synthetic as syn
+from repro.data.pipeline import BucketBatcher
+from repro.models import recsys as R
+from repro.rdma import (
+    LookupSubrequest,
+    PooledLookupService,
+    VerbsState,
+    VerbsTiming,
+    heat_affinity,
+    plan_schedule,
+)
+from repro.rdma.engine import BatchHandle
+from repro.runtime.serving import FlexEMRServer
+
+
+def _specs():
+    return (
+        TableSpec("a", 500, nnz=4),
+        TableSpec("b", 300, nnz=2, pooling="mean"),
+        TableSpec("c", 40, nnz=1),
+    )
+
+
+def _setup(num_shards=4, dim=16):
+    specs = _specs()
+    tables = make_fused_tables(specs, dim, num_shards)
+    rng = np.random.default_rng(7)
+    table_np = (0.05 * rng.normal(size=(tables.total_rows, dim))).astype(
+        np.float32
+    )
+    return tables, table_np
+
+
+# ------------------------------------------------------- async lookup handle
+
+
+def test_lookup_async_matches_sync_bit_equal(rng):
+    """Several handles in flight at once merge to exactly the closed-loop
+    results — posting early changes the schedule, never the bits."""
+    tables, tnp = _setup()
+    batches = [syn.recsys_batch(rng, tables.specs, 16) for _ in range(4)]
+    svc = PooledLookupService(tables, tnp, num_threads=4)
+    try:
+        ref = [svc.lookup(b["indices"], b["mask"]) for b in batches]
+        handles = [
+            svc.lookup_async(b["indices"], b["mask"]) for b in batches
+        ]  # all four posted before any wait: fully overlapped
+        outs = [h.wait() for h in handles]
+        for a, b in zip(outs, ref):
+            np.testing.assert_array_equal(a, b)
+        # raw-sums form (the tier-merge contract) round-trips too
+        h = svc.lookup_async(
+            batches[0]["indices"], batches[0]["mask"], mean_normalize=False
+        )
+        np.testing.assert_array_equal(
+            h.wait(),
+            svc.lookup(
+                batches[0]["indices"], batches[0]["mask"],
+                mean_normalize=False,
+            ),
+        )
+        assert h.done and h.wait() is h.wait()  # idempotent cached merge
+    finally:
+        svc.close()
+
+
+def test_legacy_lookup_async_fallback(rng):
+    """HostLookupService shares the async surface via CompletedLookup."""
+    tables, tnp = _setup()
+    svc = HostLookupService(tables, tnp)
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 8)
+        h = svc.lookup_async(b["indices"], b["mask"], hedge_timeout=0.0)
+        assert isinstance(h, CompletedLookup)
+        assert h.done and h.hedged == 0
+        np.testing.assert_array_equal(
+            h.wait(), svc.lookup(b["indices"], b["mask"])
+        )
+    finally:
+        svc.close()
+
+
+# --------------------------------------------------- hedge cancel-the-loser
+
+
+def test_batch_handle_first_writer_wins():
+    """The loser of a hedge race can never corrupt the settled slot."""
+    h = BatchHandle(2, 0.0)
+    assert h._settle(0, result="winner")
+    assert not h._settle(0, result="loser")  # cancelled
+    assert h.results[0] == "winner"
+    assert h.unsettled() == [1]
+    # a losing *failure* is dropped too: the batch stays healthy
+    assert not h._settle(0, error=RuntimeError("late straggler error"))
+    assert h.error is None
+    assert h._settle(1, result="ok")
+    assert h.done
+    assert h.wait() == ["winner", "ok"]
+
+
+def test_forced_hedge_bit_equal_and_cancelled(rng):
+    """hedge_timeout=0 duplicates every in-flight WR; outputs stay
+    bit-equal and every loser is cancelled, not merged."""
+    tables, tnp = _setup()
+    batches = [syn.recsys_batch(rng, tables.specs, 24) for _ in range(4)]
+    base = PooledLookupService(tables, tnp, num_threads=4)
+    try:
+        ref = [base.lookup(b["indices"], b["mask"]) for b in batches]
+    finally:
+        base.close()
+    # slow the servers a little so hedges race real in-flight work
+    svc = PooledLookupService(
+        tables, tnp, num_threads=4,
+        timing=VerbsTiming(t_server=2e-4), emulate_wire=True,
+    )
+    try:
+        outs = []
+        for b in batches:
+            h = svc.lookup_async(b["indices"], b["mask"], hedge_timeout=0.0)
+            outs.append(h.wait())
+            assert h.hedged > 0
+    finally:
+        svc.close()  # drains the losers still queued in sibling deques
+    s = svc.engine_summary()
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(a, b)
+    assert s["hedged"] > 0
+    # every WR settles exactly once: executions + cancellations cover the
+    # primaries AND the duplicates, and no slot merged twice (bit-equality
+    # above is the proof of that)
+    assert s["hedge_cancelled"] + sum(s["executed"]) == \
+        s["subrequests"] + s["hedged"]
+
+
+def test_hedge_after_completion_is_noop(rng):
+    tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=2)
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 8)
+        h = svc.lookup_async(b["indices"], b["mask"])
+        out = h.wait()
+        assert svc.pool.hedge(h._batch) == 0  # everything settled already
+        np.testing.assert_array_equal(out, h.wait())
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------- serving pipeline parity
+
+
+def _tiny_cfg():
+    tables = (
+        TableSpec("big", 4000, nnz=4),
+        TableSpec("mid", 1000, nnz=2),
+        TableSpec("small", 64, nnz=1),
+    )
+    return R.RecsysConfig(
+        name="t", arch="dlrm", tables=tables, embed_dim=16, n_dense=13,
+        bottom_mlp=(64, 16), mlp=(64, 32),
+    )
+
+
+def _controller(cfg):
+    return AdaptiveCacheController(
+        cfg.tables, cfg.embed_dim,
+        MemoryModel(fixed_bytes=1 << 20, bytes_per_sample=1 << 10,
+                    hbm_bytes=1 << 28),
+        field_replication=False, max_rows=1024,
+    )
+
+
+def _serve_stream(cfg, params, tables, reqs, depth, hedge_timeout,
+                  engine="pooled"):
+    server = FlexEMRServer(
+        cfg, params, tables, controller=_controller(cfg),
+        cache_refresh_every=3, pipeline_depth=depth,
+        hedge_timeout=hedge_timeout, engine=engine,
+        batcher=BucketBatcher(buckets=(8,), max_wait=0.001),
+    )
+    try:
+        for r in reqs:
+            server.submit(r)
+        outs = []
+        while True:
+            o = server.step()
+            if o is None and server.metrics.requests >= len(reqs):
+                break
+            if o is not None:
+                outs.append(o["scores"])
+        assert server.metrics.requests == len(reqs)
+        metrics = server.metrics
+    finally:
+        server.close()
+    return outs, metrics
+
+
+@pytest.fixture(scope="module")
+def serve_fixture():
+    cfg = _tiny_cfg()
+    params = R.init_params(cfg, jax.random.key(0))
+    tables = make_fused_tables(cfg.tables, cfg.embed_dim, 4)
+    rng = np.random.default_rng(3)
+    reqs = []
+    for _ in range(48):
+        b = syn.recsys_batch(rng, cfg.tables, 1, n_dense=cfg.n_dense)
+        reqs.append({"indices": b["indices"][0], "mask": b["mask"][0],
+                     "dense": b["dense"][0]})
+    return cfg, params, tables, reqs
+
+
+def test_scores_bit_equal_across_depths_and_hedge(serve_fixture):
+    """The ISSUE's non-negotiable: identical scores at pipeline_depth
+    {1, 2, 4}, hedge off / armed / forced — with the adaptive controller
+    live (cache resizes + heat-affinity swaps mid-stream included)."""
+    cfg, params, tables, reqs = serve_fixture
+    ref, _ = _serve_stream(cfg, params, tables, reqs, 1, None)
+    assert len(ref) == len(reqs) // 8
+    for depth, hedge in [(2, None), (4, None), (1, 0.05), (2, 0.05),
+                         (2, 0.0), (4, 0.0)]:
+        outs, m = _serve_stream(cfg, params, tables, reqs, depth, hedge)
+        assert len(outs) == len(ref)
+        for a, b in zip(outs, ref):
+            np.testing.assert_array_equal(a, b, err_msg=(
+                f"depth={depth} hedge={hedge} diverged"
+            ))
+        # hedge=0.0 forces a duplicate for any batch still in flight at
+        # wait(); whether one fires here is a race on a fast pool, so the
+        # deterministic hedge assertions live in the engine-level test
+        # (test_forced_hedge_bit_equal_and_cancelled) — this test pins the
+        # bit-equality contract under whatever hedging did happen.
+
+
+def test_pipelined_matches_legacy_engine(serve_fixture):
+    """Depth-2 pooled serving stays allclose to the legacy closed loop
+    (legacy merges per shard, pooled per chunk — allclose, not bit-equal,
+    exactly as the engines themselves are specified)."""
+    cfg, params, tables, reqs = serve_fixture
+    pooled, _ = _serve_stream(cfg, params, tables, reqs, 2, None)
+    legacy, _ = _serve_stream(cfg, params, tables, reqs, 2, None,
+                              engine="legacy")
+    for a, b in zip(pooled, legacy):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_close_with_full_pipeline_in_flight(serve_fixture):
+    """close() drains admitted-but-unretired batches: lookups complete,
+    nothing hangs, the engine threads exit."""
+    cfg, params, tables, reqs = serve_fixture
+    server = FlexEMRServer(
+        cfg, params, tables, pipeline_depth=4,
+        batcher=BucketBatcher(buckets=(8,), max_wait=0.001),
+    )
+    for r in reqs[:32]:
+        server.submit(r)
+    while server._admit_next():  # fill the pipeline, retire nothing
+        pass
+    assert len(server._pipeline) == 4
+    server.close()
+    assert not server._pipeline
+    assert all(not t.is_alive() for t in server.service.pool.threads)
+    with pytest.raises(RuntimeError):
+        server.service.pool.submit([])
+    server.close()  # idempotent
+
+
+# ------------------------------------------------- skew-aware shard dealing
+
+
+def test_heat_affinity_spreads_hot_shards():
+    """Two hot shards that collide under shard % T land on different
+    threads under heat dealing; cold shards round-robin the remainder."""
+    T = 4
+    heat = np.zeros(8)
+    heat[0] = 100.0
+    heat[4] = 90.0  # 4 % 4 == 0: the modulo deal would stack both on tid 0
+    aff = heat_affinity(heat, T)
+    assert aff[0] != aff[4]
+    assert set(aff.tolist()) <= set(range(T))
+    # deterministic + full coverage of threads by the cold tail
+    np.testing.assert_array_equal(aff, heat_affinity(heat, T))
+    assert len(set(aff.tolist())) == T
+    # no signal -> modulo fallback
+    np.testing.assert_array_equal(
+        heat_affinity(np.zeros(8), T), np.arange(8) % T
+    )
+
+
+def test_pool_affinity_spreads_virtual_load(rng):
+    """Traffic on shards {0, T} saturates one engine under the modulo deal;
+    the heat table splits it — visible in the virtual busy vector — while
+    the merged bits stay put."""
+    tables, tnp = _setup(num_shards=8)
+    # craft a batch whose valid ids live in shards 0 and 4 only (field 0's
+    # fused offset is 0, so the raw index IS the fused id)
+    rows_per = tables.rows_per_shard
+    F = len(tables.specs)
+    nnz = max(t.nnz for t in tables.specs)
+    idx = np.zeros((16, F, nnz), np.int64)
+    msk = np.zeros((16, F, nnz), bool)
+    span0 = min(rows_per, tables.specs[0].vocab)
+    lo4, hi4 = 4 * rows_per, min(5 * rows_per, tables.specs[0].vocab)
+    assert lo4 < hi4, "field-0 vocab must reach shard 4 for this test"
+    idx[:8, 0, :] = rng.integers(0, span0, size=(8, nnz))
+    idx[8:, 0, :] = rng.integers(lo4, hi4, size=(8, nnz))
+    msk[:, 0, :] = True
+    outs = {}
+    busy_threads = {}
+    for heat in (None, [10.0, 0, 0, 0, 9.0, 0, 0, 0]):
+        svc = PooledLookupService(
+            tables, tnp, num_threads=4, max_rows_per_subrequest=8,
+            work_stealing=False,
+        )
+        try:
+            svc.set_shard_affinity(heat)
+            outs[heat is None] = svc.lookup(idx, msk)
+            busy_threads[heat is None] = int(
+                sum(b > 0 for b in svc.pool.virtual_busy)
+            )
+        finally:
+            svc.close()
+    np.testing.assert_array_equal(outs[True], outs[False])
+    assert busy_threads[True] == 1  # modulo: shards 0 and 4 share tid 0
+    assert busy_threads[False] >= 2  # heat dealing split them
+
+
+def test_controller_shard_heat(rng):
+    cfg = _tiny_cfg()
+    ctl = _controller(cfg)
+    total = sum(t.vocab for t in cfg.tables)
+    rows_per = 1000
+    n_shards = -(-total // rows_per)
+    ctl.observe(32, np.full(200, 1500, np.int64))  # all heat in shard 1
+    heat = ctl.shard_heat(rows_per, n_shards)
+    assert heat.shape == (n_shards,)
+    assert int(np.argmax(heat)) == 1
+    assert heat.sum() > 0 and heat[heat != heat[1]].sum() == 0
+    with pytest.raises(ValueError):
+        ctl.shard_heat(0, n_shards)
+
+
+# -------------------------------------------------- credit-latency coupling
+
+
+def _wrs(n, servers=1, rbytes=4096):
+    return [
+        LookupSubrequest(
+            server=i % servers, row_ids=np.arange(4),
+            bag_ids=np.zeros(4, np.int64), num_bags=8, pushdown=True,
+            response_bytes=rbytes, slot=i,
+        )
+        for i in range(n)
+    ]
+
+
+def test_blocked_posts_pay_credit_return_latency():
+    """With the window saturated, every blocked doorbell group waits for a
+    completion PLUS the credit-return flight; free-credit pricing (0) is
+    strictly faster, by at least one flight per blocked group."""
+    kw = dict(doorbell_batch=2, max_inflight=2, work_stealing=False)
+    charged = plan_schedule(_wrs(24), 1, VerbsTiming(), **kw)
+    free = plan_schedule(
+        _wrs(24), 1, VerbsTiming(t_credit_return=0.0), **kw
+    )
+    assert charged.makespan > free.makespan
+    assert charged.makespan - free.makespan >= 5 * VerbsTiming().t_credit_return
+
+
+def test_credit_return_priced_from_flow_control():
+    conn = CreditedConnection()
+    timing = VerbsTiming.from_flow_control(conn)
+    assert timing.t_credit_return == conn.credit_return_latency() > 0
+    # the default constant IS the default connection's flight time
+    assert VerbsTiming().t_credit_return == pytest.approx(
+        CreditedConnection().credit_return_latency()
+    )
+
+
+# ------------------------------------------- cross-batch virtual timing
+
+
+def test_verbs_state_carries_qp_busy_across_batches():
+    """Batch 2 posted before batch 1 completes queues behind its wire; a
+    synced frontier restores the fresh-state latency exactly."""
+    timing = VerbsTiming()
+    big = 1 << 20  # 1 MiB responses: wire-dominated
+
+    fresh = plan_schedule(_wrs(8, rbytes=big), 2, timing)
+    state = VerbsState.fresh(2)
+    first = plan_schedule(_wrs(8, rbytes=big), 2, timing, state=state)
+    assert first.makespan == fresh.makespan
+    # overlapped submit (no sync): the second batch shares the arrival
+    # frontier and serializes behind the first batch's busy QPs
+    second = plan_schedule(_wrs(8, rbytes=big), 2, timing, state=state)
+    assert second.arrival == first.arrival
+    assert second.makespan > fresh.makespan
+    assert second.end > first.end
+    # synced frontier = closed loop: per-batch latency is fresh again
+    state.sync(second.end)
+    third = plan_schedule(_wrs(8, rbytes=big), 2, timing, state=state)
+    assert third.arrival == second.end
+    assert third.makespan == pytest.approx(fresh.makespan)
+
+
+def test_verbs_state_retired_engines_keep_real_clock():
+    """With stealing off, an engine that drains its queue retires from the
+    batch's event loop — but the carried state must remember its REAL
+    end-of-posting clock, not the batch arrival, or the next pipelined
+    batch under-prices contention."""
+    timing = VerbsTiming()
+    state = VerbsState.fresh(2)
+    plan_schedule(_wrs(8, servers=2), 2, timing, work_stealing=False,
+                  state=state)
+    assert all(np.isfinite(c) for c in state.clock)
+    # both engines posted work, so both are busy past the arrival frontier
+    assert min(state.clock) > state.now
+
+
+def test_pool_overlapped_submits_share_frontier(rng):
+    tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=2)
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 16)
+        h0 = svc.lookup_async(b["indices"], b["mask"])
+        h1 = svc.lookup_async(b["indices"], b["mask"])  # before h0.wait()
+        assert h1._batch.v_end > h0._batch.v_end  # queued behind, virtually
+        a0, a1 = h0.wait(), h1.wait()
+        np.testing.assert_array_equal(a0, a1)
+        # after the waits the frontier has advanced past both batches
+        assert svc.pool.vstate.now >= h1._batch.v_end
+        h2 = svc.lookup_async(b["indices"], b["mask"])
+        assert h2._batch.v_end > h1._batch.v_end
+        h2.wait()
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------- simulator overlap model
+
+
+def test_simulator_predicts_pipeline_overlap():
+    from repro.runtime.simulator import compare_pipeline
+
+    out = compare_pipeline(depths=(1, 2), n_batches=300, t_dense=20e-6)
+    assert out["speedup"] > 1.1  # depth 2 hides lookup behind dense
+    assert out["overlap_utilization_gain"] > 0
+    # t_dense=0 keeps the pure lookup microbenchmark (legacy behaviour)
+    base = compare_pipeline(depths=(1, 2), n_batches=300, t_dense=0.0)
+    assert base[1]["throughput_batches_per_s"] > \
+        out[1]["throughput_batches_per_s"]
+
+
+# ------------------------------------------------------- tier begin/wait
+
+
+def test_tier_begin_wait_matches_lookup(rng):
+    """Two tiered stacks, same stream: one closed-loop, one with two
+    lookups in flight — identical pooled bits and identical stats."""
+    from repro.hotcache.miss_path import TieredLookupService
+
+    tables, tnp = _setup()
+    batches = [syn.recsys_batch(rng, tables.specs, 16) for _ in range(6)]
+
+    def stream(pipelined):
+        svc = PooledLookupService(tables, tnp, num_threads=4)
+        tier = TieredLookupService(svc, num_slots=128, refresh_every=2)
+        outs = []
+        try:
+            if pipelined:
+                pending = None
+                for b in batches:
+                    nxt = tier.lookup_begin(b["indices"], b["mask"])
+                    if pending is not None:
+                        outs.append(pending.wait())
+                    pending = nxt
+                outs.append(pending.wait())
+            else:
+                outs = [tier.lookup(b["indices"], b["mask"])
+                        for b in batches]
+            stats = tier.stats
+        finally:
+            svc.close()
+        return outs, stats
+
+    ref, s_ref = stream(False)
+    out, s_out = stream(True)
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert s_out.lookups == s_ref.lookups
+    assert s_out.bytes_no_cache == s_ref.bytes_no_cache
