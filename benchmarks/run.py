@@ -7,9 +7,9 @@ quantity), then the full §Roofline table assembled from the dry-run artifacts.
   PYTHONPATH=src python -m benchmarks.run --smoke    # seconds-scale subset
 
 ``--smoke`` runs the fast regression subset — the hotcache, prefetch, rdma,
-and pipeline benches in their shrunk configurations — so cache-, prefetch-,
-engine-, and pipeline-path regressions show up in the bench trajectory
-without paying for the full figure sweep.
+pipeline, and dedup benches in their shrunk configurations — so cache-,
+prefetch-, engine-, pipeline-, and wire-dedup-path regressions show up in
+the bench trajectory without paying for the full figure sweep.
 """
 from __future__ import annotations
 
@@ -23,7 +23,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fast regression subset "
-                    "(hotcache/prefetch/rdma/pipeline)")
+                    "(hotcache/prefetch/rdma/pipeline/dedup)")
     opts = ap.parse_args(argv)
     rows = []
 
@@ -40,6 +40,7 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
 
     from benchmarks import (
+        dedup_bench,
         hotcache_bench,
         pipeline_bench,
         prefetch_bench,
@@ -71,6 +72,13 @@ def main(argv=None) -> None:
         f"calib_err="
         f"{abs(o['calibration_achieved_util'] - o['calibration_target_util']):.3f}"
     )
+    dedup_derive = lambda o: (  # noqa: E731
+        f"byte_reduction={o['byte_reduction_high_skew']:.2f}x "
+        f"p99={o['p99_speedup_high_skew']:.2f}x "
+        f"coalesced={o['coalesced_rows']} "
+        f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
+        f"sim_err={o['sim_rel_err']:.1%}"
+    )
 
     if opts.smoke:
         bench(
@@ -92,6 +100,11 @@ def main(argv=None) -> None:
             "pipeline_smoke",
             lambda: pipeline_bench.run(smoke=True),
             pipeline_derive,
+        )
+        bench(
+            "dedup_smoke",
+            lambda: dedup_bench.run(smoke=True),
+            dedup_derive,
         )
         failed = [r for r in rows if r[2] == "FAILED"]
         if failed:
@@ -145,6 +158,7 @@ def main(argv=None) -> None:
     bench("prefetch", prefetch_bench.run, prefetch_derive)
     bench("rdma", rdma_bench.run, rdma_derive)
     bench("pipeline", pipeline_bench.run, pipeline_derive)
+    bench("dedup", dedup_bench.run, dedup_derive)
 
     print()
     try:

@@ -90,7 +90,28 @@ class EmaFrequencyTracker:
         self._score = np.zeros((0,), np.float64)
 
     def update(self, row_ids: np.ndarray) -> None:
+        """Fold one batch of row references into the decayed counts.
+
+        **Per-touch semantics (pinned):** a row referenced k times in one
+        batch earns k counts, not 1.  Heat measures *reference* frequency,
+        not fetch frequency: a cached row saves work on every reference
+        (cache-pool scatter, pushdown partials, or — with the §3.1.1 wire
+        dedup — the one unique fetch per batch it keeps appearing in), and
+        within-batch multiplicity under zipf traffic is exactly the
+        temporal-locality signal that predicts cross-batch recurrence.
+        Deduplicating here would flatten hot rows' scores toward the long
+        tail and starve LFU admission of its ranking signal.
+        """
         ids, counts = np.unique(np.asarray(row_ids).ravel(), return_counts=True)
+        self.update_unique(ids, counts)
+
+    def update_unique(self, ids: np.ndarray, counts: np.ndarray) -> None:
+        """``update`` for callers that already hold the batch's unique ids
+        and per-touch counts — e.g. the serving loop reusing the §3.1.1
+        wire-dedup pass instead of re-running ``np.unique`` on the hot
+        path.  ``ids`` must be sorted unique; ``counts`` aligned."""
+        ids = np.asarray(ids, np.int64)
+        counts = np.asarray(counts)
         self._score *= self.decay
         merged_ids = np.union1d(self._ids, ids)
         score = np.zeros(merged_ids.shape, np.float64)
@@ -189,9 +210,28 @@ class AdaptiveCacheController:
         # piggyback on per refresh (0 disables prefetch budgeting).
         self.prefetch_frac = prefetch_frac
 
-    def observe(self, batch_size: int, row_ids: np.ndarray) -> None:
+    def observe(
+        self,
+        batch_size: int,
+        row_ids: np.ndarray | None = None,
+        *,
+        unique: tuple[np.ndarray, np.ndarray] | None = None,
+    ) -> None:
+        """Feed one batch into the load monitor + frequency tracker.
+
+        Pass either ``row_ids`` (raw references; an ``np.unique`` runs
+        here) or ``unique=(ids, counts)`` — the §3.1.1 dedup pass's unique
+        ids and per-touch counts, reused so the serving hot path does not
+        recompute the aggregation it already paid for.  The two paths feed
+        identical tracker state (asserted by a regression test), so
+        ``shard_heat`` — and therefore the engine pool's heat dealing — is
+        unchanged by which one the caller uses.
+        """
         self.monitor.observe(batch_size)
-        self.tracker.update(row_ids)
+        if unique is not None:
+            self.tracker.update_unique(*unique)
+        elif row_ids is not None:
+            self.tracker.update(row_ids)
 
     def shard_heat(
         self, rows_per_shard: int, num_shards: int

@@ -44,8 +44,19 @@ class EmbeddingServer:
         self.rows = rows  # [rows_per_shard, D]
 
     def lookup_rows(self, row_ids: np.ndarray) -> np.ndarray:
-        """Fig 4(a): return raw embedding rows (bytes ~ len(row_ids) * D)."""
+        """Fig 4(a): return raw embedding rows (bytes ~ len(row_ids) * D).
+
+        ``row_ids`` may repeat; a repeated id is gathered (and shipped)
+        once per occurrence — the duplicate traffic the §3.1.1 wire-dedup
+        path (``dedup=True`` services) removes before posting."""
         return self.rows[row_ids - self.start_row]
+
+    def read_range(self, start_row_id: int, n: int) -> np.ndarray:
+        """Range read: ``n`` consecutive rows from ``start_row_id`` — the
+        server-side of a range-coalesced WR.  A contiguous slice (no gather
+        indirection), mirroring a single contiguous RDMA READ."""
+        lo = int(start_row_id) - self.start_row
+        return self.rows[lo : lo + n]
 
     def lookup_pooled(
         self, row_ids: np.ndarray, bag_ids: np.ndarray, num_bags: int
@@ -72,6 +83,9 @@ class Subrequest:
     result_slot: int
     done: threading.Event
     results: list  # shared list, written at result_slot
+    # §3.1.1 wire dedup: when set, row_ids are unique and the ranker
+    # scatters the returned rows via rows[gather_idx] aligned with bag_ids.
+    gather_idx: np.ndarray | None = None
 
 
 class Connection:
@@ -127,7 +141,10 @@ class RdmaEngine(threading.Thread):
                 # RNIC parallelism unit. Cross-engine sharing => contention.
                 with conn.unit:
                     srv = conn.server
-                    if req.pushdown:
+                    if req.gather_idx is not None:
+                        # Wire dedup: unique rows once; ranker scatters.
+                        res = srv.lookup_rows(req.row_ids)
+                    elif req.pushdown:
                         res = srv.lookup_pooled(req.row_ids, req.bag_ids, req.num_bags)
                     else:
                         res = (srv.lookup_rows(req.row_ids), req.bag_ids)
@@ -184,8 +201,9 @@ class HostLookupService:
         num_units: int | None = None,
         mapping_aware: bool = True,
         pushdown: bool = True,
+        dedup: bool = False,
     ):
-        self._init_core(tables, table_array, pushdown)
+        self._init_core(tables, table_array, pushdown, dedup=dedup)
         num_units = num_units or num_engines
         self.units = [threading.Lock() for _ in range(num_units)]
         # RNIC behaviour: units round-robin over connections at creation.
@@ -211,13 +229,26 @@ class HostLookupService:
             e.start()
 
     def _init_core(
-        self, tables: FusedTables, table_array: np.ndarray, pushdown: bool
+        self,
+        tables: FusedTables,
+        table_array: np.ndarray,
+        pushdown: bool,
+        dedup: bool = False,
     ) -> None:
         """State shared by every engine implementation (legacy + rdma pool):
-        the fused-table layout, the range router, and the DRAM shards."""
+        the fused-table layout, the range router, and the DRAM shards.
+
+        ``dedup`` selects the §3.1.1 unique-row wire protocol: subrequests
+        carry each distinct miss row once (the servers gather and ship it
+        once) and the ranker scatters through the inverse map.  It replaces
+        the per-subrequest transfer format (including pushdown's per-bag
+        partials) for lookups, never their pooled value: the float64
+        scatter adds exactly the row values the duplicated transfer would
+        have, so outputs are bit-equal with dedup on or off."""
         self.tables = tables
         self.router = RangeRouter(tables)
         self.pushdown = pushdown
+        self.dedup = dedup
         rps = tables.rows_per_shard
         self.servers = [
             EmbeddingServer(s, s * rps, table_array[s * rps : (s + 1) * rps])
@@ -255,6 +286,27 @@ class HostLookupService:
         bounds = np.searchsorted(shard, np.arange(self.tables.num_shards + 1))
         return fused, bag, bounds, B * F, self.servers[0].rows.shape[1]
 
+    def _dedup_plan(
+        self, fused: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The dedup pass: ONE global unique over the shard-sorted plan.
+
+        Returns ``(uniq, inv, ubounds)``: the sorted unique fused ids (a
+        sorted id list is automatically shard-contiguous, since an id's
+        owning shard is ``id // rows_per_shard``), the inverse map giving
+        every plan position its row in ``uniq``, and ``ubounds[s] :
+        ubounds[s+1]`` delimiting shard ``s``'s span of ``uniq``.  Both
+        engines (legacy + rdma pool) cut their unique-row subrequests from
+        this one pass, so their WR contents — and the scatter that makes
+        outputs bit-equal to the duplicated transfer — agree exactly.
+        """
+        uniq, inv = np.unique(fused, return_inverse=True)
+        rps = self.tables.rows_per_shard
+        ubounds = np.searchsorted(
+            uniq, np.arange(self.tables.num_shards + 1) * rps
+        )
+        return uniq, inv, ubounds
+
     def _finalize(
         self, out: np.ndarray, mask: np.ndarray, mean_normalize: bool
     ) -> np.ndarray:
@@ -283,6 +335,8 @@ class HostLookupService:
         """
         B, F, _ = indices.shape
         fused, bag, bounds, num_bags, D = self._plan_fanout(indices, mask)
+        if self.dedup:
+            uniq, inv, ubounds = self._dedup_plan(fused)
 
         reqs: list[Subrequest] = []
         results: list = [None] * self.tables.num_shards
@@ -290,15 +344,24 @@ class HostLookupService:
             lo, hi = bounds[s], bounds[s + 1]
             if lo == hi:
                 continue
+            if self.dedup:
+                # Unique-row wire protocol: each distinct miss row of this
+                # shard crosses the wire once; the scatter map rebuilds the
+                # duplicated view at merge time.
+                u0, u1 = int(ubounds[s]), int(ubounds[s + 1])
+                row_ids, gather_idx = uniq[u0:u1], inv[lo:hi] - u0
+            else:
+                row_ids, gather_idx = fused[lo:hi], None
             req = Subrequest(
                 server=s,
-                row_ids=fused[lo:hi],
+                row_ids=row_ids,
                 bag_ids=bag[lo:hi],
                 num_bags=num_bags,
                 pushdown=self.pushdown,
                 result_slot=s,
                 done=threading.Event(),
                 results=results,
+                gather_idx=gather_idx,
             )
             conn = self.connections[s]
             self.conn_engine[conn].submit(conn, req)
@@ -307,10 +370,15 @@ class HostLookupService:
             r.done.wait()
 
         out = np.zeros((num_bags, D), np.float64)
-        for s, res in enumerate(results):
+        for req in reqs:
+            res = results[req.result_slot]
             if res is None:
                 continue
-            if self.pushdown:
+            if req.gather_idx is not None:
+                # dedup scatter: the same row values the duplicated
+                # transfer would have added, through the inverse map
+                np.add.at(out, req.bag_ids, res[req.gather_idx])
+            elif self.pushdown:
                 out += res  # global combine of partial pools (fig 4b)
             else:
                 rows, bags = res  # ranker-side pooling (fig 4a)
@@ -346,10 +414,25 @@ class HostLookupService:
     def network_bytes(self, indices: np.ndarray, mask: np.ndarray) -> int:
         """Response bytes on the wire (the paper's Fig-4 quantity).
 
-        Wire format is sparse: each entry is <bag_id:4B, vector:D*itemsize>.
-        fig 4(a) raw mode sends one entry per *row hit*; fig 4(b) pushdown
-        sends one entry per (server, bag) with >=1 hit — the partial pool.
-        Pushdown <= raw always, with equality at one hit per (server, bag).
+        **Contract: accounting == movement.**  This prices exactly the
+        response payloads this service's subrequests carry for this batch
+        (pinned by a regression test against the per-WR ``response_bytes``
+        actually posted):
+
+          * fig 4(a) raw mode (``dedup=False, pushdown=False``): one
+            <bag_id:4B, vector:D*itemsize> entry per *row hit* — duplicate
+            ids are shipped once per occurrence, so duplicates are priced;
+          * fig 4(b) pushdown (``dedup=False, pushdown=True``): one entry
+            per (server, bag) partial pool with >= 1 hit;
+          * §3.1.1 wire dedup (``dedup=True``): one entry per *unique*
+            miss row — the deduplicated transfer, priced post-dedup.  (The
+            rdma pool's range-coalesced WRs additionally drop the per-row
+            tag inside a dense run; its ``network_bytes`` override prices
+            those from the actual WR cut.)
+
+        Request-direction id bytes are tracked separately by the engine
+        pool (``wire_request_bytes`` in the summary), keeping this quantity
+        comparable with the Fig-4 response-byte A/Bs.
 
         The model prices vectors at the table itemsize (f32): a production
         deployment quantizes partial pools back to the row dtype on the
@@ -363,6 +446,8 @@ class HostLookupService:
         entry = 4 + D * self.servers[0].rows.dtype.itemsize
         offs = self.tables.field_offsets_array()
         fused = indices.astype(np.int64) + offs[None, :, None]
+        if self.dedup:
+            return self.unique_response_bytes(np.unique(fused[mask]))
         shard = np.where(mask, self.router.shard_of(fused), -1)
         if self.pushdown:
             bag = np.broadcast_to(
@@ -371,6 +456,15 @@ class HostLookupService:
             pairs = np.stack([shard.ravel(), bag.ravel()], 1)[mask.ravel()]
             return len(np.unique(pairs, axis=0)) * entry
         return int(mask.sum()) * entry
+
+    def unique_response_bytes(self, uniq: np.ndarray) -> int:
+        """Dedup-protocol pricing from a precomputed sorted unique id set —
+        the closed form behind ``network_bytes`` when ``dedup=True``,
+        callable directly by tiers that already hold the dedup prepass
+        (``miss_path`` reuses its ``collect_unique`` pass here instead of
+        re-running ``np.unique`` for byte accounting)."""
+        D = self.servers[0].rows.shape[1]
+        return len(uniq) * (4 + D * self.servers[0].rows.dtype.itemsize)
 
 
 # --------------------------------------------------------------------- SPMD

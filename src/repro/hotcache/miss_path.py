@@ -240,13 +240,22 @@ class PendingTieredLookup:
     """
 
     def __init__(self, tier: "TieredLookupService", sums: np.ndarray,
-                 mask: np.ndarray, remote, do_refresh: bool):
+                 mask: np.ndarray, remote, do_refresh: bool,
+                 unique_ids: np.ndarray | None = None,
+                 unique_counts: np.ndarray | None = None):
         self._tier = tier
         self._sums = sums
         self._mask = mask
         self._remote = remote  # async-handle surface or None (no misses)
         self._do_refresh = do_refresh
         self._out: np.ndarray | None = None
+        # The §3.1.1 dedup prepass over this batch's VALID ids (sorted
+        # unique fused ids + per-touch counts), computed at admit time when
+        # ``collect_unique`` is on.  The serving loop feeds these to the
+        # adaptive-cache controller (``observe(unique=...)``) instead of
+        # re-running np.unique over the raw references at retire time.
+        self.unique_ids = unique_ids
+        self.unique_counts = unique_counts
 
     @property
     def done(self) -> bool:
@@ -303,6 +312,7 @@ class TieredLookupService:
         remote_async_fn=None,
         track_bytes: bool = True,
         prefetcher: "PrefetchEngine | None" = None,
+        collect_unique: bool = False,
     ):
         if remote_fn is not None and remote_async_fn is not None:
             raise ValueError("pass remote_fn OR remote_async_fn, not both")
@@ -312,6 +322,12 @@ class TieredLookupService:
         self.policy = policy or AdmissionPolicy()
         self.refresh_every = refresh_every
         self.track_bytes = track_bytes
+        # collect_unique=True: lookup_begin runs the dedup prepass (one
+        # np.unique over the batch's valid fused ids) and publishes
+        # (unique_ids, per-touch counts) on the pending handle, so a
+        # serving loop's controller can consume heat without recomputing
+        # the aggregation at retire time.
+        self.collect_unique = collect_unique
         self.prefetcher = prefetcher
         self.remote_fn = remote_fn or (
             lambda idx, cold: service.lookup(idx, cold, mean_normalize=False)
@@ -360,8 +376,19 @@ class TieredLookupService:
         self.stats.lookups += int(mask.sum())
         do_refresh = bool(self.refresh_every) and \
             self.stats.batches % self.refresh_every == 0
+        uniq = counts = None
+        if self.collect_unique:
+            uniq, counts = np.unique(fused[mask], return_counts=True)
         if self.track_bytes:
-            self.stats.bytes_no_cache += self.service.network_bytes(indices, mask)
+            if uniq is not None and getattr(self.service, "dedup", False):
+                # Reuse the dedup prepass for the no-cache price too — the
+                # closed form needs exactly this sorted unique id set, so
+                # the batch pays ONE aggregation for heat + accounting.
+                self.stats.bytes_no_cache += \
+                    self.service.unique_response_bytes(uniq)
+            else:
+                self.stats.bytes_no_cache += \
+                    self.service.network_bytes(indices, mask)
         if self.prefetcher is not None:
             self.prefetcher.observe(fused, mask)  # mine co-occurrence online
             self._sync_prefetch_evictions()  # incl. external plan inserts
@@ -394,18 +421,31 @@ class TieredLookupService:
         remote = None
         cold = mask & ~hit
         if cold.any():
-            if self.track_bytes:
-                self.stats.bytes_network += self.service.network_bytes(
-                    indices, cold
-                )
             remote = self._remote_begin(indices, cold)
+            if self.track_bytes:
+                # Accounting == movement: a dedup-capable handle reports
+                # the response bytes its WRs genuinely posted (borrowed
+                # in-flight rows move zero new bytes); other executors fall
+                # back to the service's per-batch closed form.
+                wrb = getattr(remote, "wire_response_bytes", None)
+                self.stats.bytes_network += (
+                    wrb if wrb is not None
+                    else self.service.network_bytes(indices, cold)
+                )
             if self.refresh_every:
                 # The tier-local LFU tracker only feeds the self-driven
                 # refresh; with refresh_every=0 an external controller owns
                 # admissions (and runs its own tracker), so updating here
                 # would be pure serial overhead on the pipelined hot path.
+                # PER-TOUCH admission semantics (pinned): a row referenced
+                # k times in this batch earns k counts — see
+                # EmaFrequencyTracker.update for why dedup must NOT apply
+                # to the heat signal even though it applies to the wire.
                 self.tracker.update(fused[cold])
-        return PendingTieredLookup(self, out, mask, remote, do_refresh)
+        return PendingTieredLookup(
+            self, out, mask, remote, do_refresh,
+            unique_ids=uniq, unique_counts=counts,
+        )
 
     def lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
         """[B,F,nnz] -> [B,F,D] pooled; only cache misses hit the network.

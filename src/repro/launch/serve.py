@@ -68,6 +68,7 @@ def run(args) -> dict:
         cfg, params, tables, controller=controller,
         num_engines=args.num_engines, pushdown=not args.no_pushdown,
         engine=args.engine, pipeline_depth=args.pipeline_depth,
+        dedup=not args.no_dedup,
     )
     try:
         sizes = syn.diurnal_batches(rng, args.requests // 8, base=8, peak=64)
@@ -120,6 +121,10 @@ def main():
     ap.add_argument("--cache-rows", type=int, default=65536)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--no-pushdown", action="store_true")
+    ap.add_argument("--no-dedup", action="store_true",
+                    help="disable the §3.1.1 wire dedup (unique-row "
+                    "subrequests + in-flight coalescing + range WRs); "
+                    "outputs are bit-equal either way")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     run(args)

@@ -203,7 +203,15 @@ class _EngineThread(threading.Thread):
                 return
         try:
             srv = self.pool.servers[wr.server]
-            if wr.pushdown:
+            if wr.dedup:
+                # Unique-row wire protocol (§3.1.1): the server ships each
+                # row once; the ranker scatters via wr.gather_idx.  A
+                # contiguous WR is a range read — one slice, no gather.
+                if wr.contiguous:
+                    res = srv.read_range(int(wr.row_ids[0]), len(wr.row_ids))
+                else:
+                    res = srv.lookup_rows(wr.row_ids)
+            elif wr.pushdown:
                 res = srv.lookup_pooled(wr.row_ids, wr.bag_ids, wr.num_bags)
             else:
                 res = (srv.lookup_rows(wr.row_ids), wr.bag_ids)
@@ -270,6 +278,8 @@ class RdmaEnginePool:
         self.batches = 0
         self.subrequests = 0
         self.hedged = 0  # duplicate WRs issued by hedge()
+        self.wire_response_bytes = 0  # response payload actually posted
+        self.wire_request_bytes = 0  # request-direction ids / descriptors
         self.threads = [_EngineThread(self, t) for t in range(num_threads)]
         for t in self.threads:
             t.start()
@@ -302,6 +312,8 @@ class RdmaEnginePool:
             handle.wrs = list(subreqs)
             self.batches += 1
             self.subrequests += len(subreqs)
+            self.wire_response_bytes += sum(r.response_bytes for r in subreqs)
+            self.wire_request_bytes += sum(r.request_bytes for r in subreqs)
             self.virtual_latencies.append(plan.makespan)
             self.virtual_busy += np.asarray(plan.busy)
             self.virtual_span = max(self.virtual_span, plan.end)
@@ -349,6 +361,12 @@ class RdmaEnginePool:
                     others or self.threads, key=lambda t: (len(t.deque), t.tid)
                 )
                 target.deque.appendleft((dataclasses.replace(wr), handle))
+                # A posted duplicate moves wire bytes like any other WR
+                # (a loser cancelled before execution is the lucky case;
+                # counting at post keeps the counter an upper bound the
+                # same way a real NIC's posted-WR accounting is).
+                self.wire_response_bytes += wr.response_bytes
+                self.wire_request_bytes += wr.request_bytes
                 n += 1
             if n:
                 self.hedged += n
@@ -399,6 +417,8 @@ class RdmaEnginePool:
             "num_threads": self.num_threads,
             "batches": self.batches,
             "subrequests": self.subrequests,
+            "wire_response_bytes": self.wire_response_bytes,
+            "wire_request_bytes": self.wire_request_bytes,
             "doorbells": self.doorbells,
             "virtual_steals": self.virtual_steals,
             "real_steals": sum(t.stolen for t in self.threads),

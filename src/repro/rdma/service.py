@@ -1,17 +1,42 @@
 """Pooled host lookup service: the §3.2 engine behind the miss path.
 
 Paper anchor: §3.2 — concurrent lookup subrequests over the multi-threaded
-RDMA engine.  ``PooledLookupService`` is a drop-in for
+RDMA engine — and §3.1.1's temporal-locality lever applied at the *wire*
+layer: zipf-skewed traffic references the same hot rows many times within a
+batch and across pipelined in-flight batches, so the pooled service ships
+each distinct row at most once.  ``PooledLookupService`` is a drop-in for
 ``core.lookup_engine.HostLookupService`` (same ``lookup`` / ``gather_rows``
 / ``network_bytes`` / ``close`` surface, same fan-out plan, same DRAM
 shards) whose fan-out executes on a ``repro.rdma.RdmaEnginePool`` instead of
 the legacy per-connection engine threads:
 
-  * each shard's span of the fan-out plan is cut into subrequests of at most
-    ``max_rows_per_subrequest`` rows — the *subrequest fanout* that gives the
-    pool parallelism to exploit even when one shard dominates a batch;
-  * subrequests are dispatched across the engine threads (per-thread QPs,
-    work-stealing, doorbell batching, credit window — see repro.rdma.engine);
+  * **subrequest dedup** (``dedup=True``, the default): ONE stable
+    ``np.unique`` over the shard-sorted fan-out plan (the *dedup pass*,
+    ``HostLookupService._dedup_plan``) yields the unique miss rows + the
+    inverse map; subrequests carry only unique rows, each server gathers
+    and ships a row once, and the ranker scatters the returned rows back
+    through the inverse map into the issue-order float64 merge — outputs
+    stay bit-equal with dedup on or off, across thread counts, chunking,
+    stealing, hedging, and pipeline depths;
+  * **range-coalesced WRs** (``range_coalesce=True``): after dedup the
+    unique ids are sorted, so runs of adjacent ids inside a shard span fold
+    into *range reads* — one WQE, one contiguous payload with no per-row
+    wire tags (``verbs.LookupSubrequest.contiguous``) — and the doorbell
+    batching / credit window see fewer, larger WRs (zipf hot heads are
+    dense id ranges under a rank-ordered layout, so high skew collapses to
+    a handful of range WRs);
+  * **in-flight coalescing** (``inflight_coalesce=True``): an in-flight
+    row table maps every posted unique row to its pending ``(BatchHandle,
+    slot, index)``.  A pipelined batch N+1 whose miss rows are already on
+    the wire for batch N *borrows* those fetches instead of re-posting
+    them — the BatchHandle slot machinery's first-writer-wins settling
+    already guarantees the donor's result lands exactly once, so the
+    borrower just scatters from the donor's settled slot at merge time;
+  * remaining subrequests are cut to at most ``max_rows_per_subrequest``
+    rows — the *subrequest fanout* that gives the pool parallelism to
+    exploit even when one shard dominates a batch — and dispatched across
+    the engine threads (per-thread QPs, work-stealing, doorbell batching,
+    credit window — see repro.rdma.engine);
   * partial results are merged **in subrequest issue order**, in float64 over
     exactly-representable float32 rows.
 
@@ -39,12 +64,19 @@ Invariants:
     could across the cache/wire split).  A hedged duplicate computes the
     identical partial and only the first completion settles the slot, so
     hedging cannot perturb the merge either.
-  * ``network_bytes`` keeps pricing the per-(server, bag) partials of Fig 4
-    so cache/prefetch A/Bs stay comparable across engines; the verbs timing
-    model prices the finer per-subrequest partials it actually moves.
+  * ``network_bytes`` prices the bytes this service actually moves
+    (accounting == movement, pinned by a regression test): with
+    ``dedup=False`` the per-(server, bag) partials of Fig 4 / per-hit raw
+    rows exactly as the chunked subrequests carry them, and with
+    ``dedup=True`` the post-dedup unique-row payloads of the actual WR cut
+    (range WRs priced tag-free).  In-flight coalescing moves *fewer* bytes
+    than this per-batch quantity — the borrowed rows ride a previous
+    batch's WRs — which the tiered miss path accounts by reading the
+    handle's ``wire_response_bytes`` (the bytes genuinely posted).
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -74,6 +106,9 @@ class LookupHandle:
         mask: np.ndarray,
         mean_normalize: bool,
         hedge_timeout: float | None = None,
+        borrows: list | None = None,
+        wire_response_bytes: int = 0,
+        wire_request_bytes: int = 0,
     ):
         self._service = service
         self._batch = batch
@@ -84,10 +119,28 @@ class LookupHandle:
         self.hedged = 0  # duplicate WRs this handle re-issued
         self._hedge_armed = False  # a wait() retry must not re-duplicate
         self._out: np.ndarray | None = None
+        # In-flight coalescing (§3.1.1): rows this lookup borrows from a
+        # previous batch's still-pending (or settled) WRs instead of
+        # re-posting.  Each record is (donor BatchHandle, donor slot,
+        # row indices within the donor WR, bag ids to scatter into).
+        self._borrows = borrows or []
+        # Fused ids this handle's own WRs registered in the service's
+        # in-flight row table (purged at wait()).
+        self._reg_ids: list[int] = []
+        # Response/request bytes genuinely posted for this lookup at SUBMIT
+        # time (borrowed rows move zero new bytes) — the movement the miss
+        # tier accounts.  Pinned semantics: straggler-hedge duplicates are
+        # posted later, inside wait(), and are counted only in the pool's
+        # wire counters (engine summary) — they are mitigation overhead of
+        # the engine, not part of the batch's transfer size, so per-batch
+        # A/Bs stay comparable whether a straggler happened to fire or not.
+        self.wire_response_bytes = wire_response_bytes
+        self.wire_request_bytes = wire_request_bytes
 
     @property
     def done(self) -> bool:
-        return self._batch is None or self._batch.done
+        own = self._batch is None or self._batch.done
+        return own and all(rec[0].done for rec in self._borrows)
 
     @property
     def virtual_latency(self) -> float:
@@ -100,8 +153,15 @@ class LookupHandle:
         B, F, D = self._shape
         out = np.zeros((B * F, D), np.float64)
         bh = self._batch
+        t0 = time.monotonic()
+
+        def remaining():
+            return (
+                None if timeout is None
+                else max(0.0, timeout - (time.monotonic() - t0))
+            )
+
         if bh is not None:
-            t0 = time.monotonic()
             if (
                 self.hedge_timeout is not None
                 and not self._hedge_armed
@@ -113,25 +173,44 @@ class LookupHandle:
                 # not stack further duplicates behind the first set.
                 self._hedge_armed = True
                 self.hedged += self._service.pool.hedge(bh)
-            # The hedge-arming wait spends part of the caller's budget.
-            remaining = (
-                None if timeout is None
-                else max(0.0, timeout - (time.monotonic() - t0))
-            )
             try:
-                results = bh.wait(remaining)
+                # The hedge-arming wait spent part of the caller's budget.
+                results = bh.wait(remaining())
             finally:
                 # Advance the closed-loop frontier even when the batch
                 # failed or timed out: its virtual end is fixed at submit,
                 # and a stale frontier would price every later lookup as
                 # overlapped with this one.
                 self._service.pool.sync_frontier(bh)
-            for res in results:  # issue order: deterministic f64 merge
-                if self._service.pushdown:
+                # The fetched rows are now materialized in the settled
+                # slots; later batches re-post rather than borrow from a
+                # retired lookup, keeping the table bounded by the rows
+                # genuinely in flight.
+                self._service._unregister(self)
+            for wr, res in zip(bh.wrs, results):  # issue order: f64 merge
+                if wr.dedup:
+                    # unique-row protocol: scatter each fetched row into
+                    # every bag position that referenced it (the same
+                    # values the duplicated transfer would have added)
+                    np.add.at(out, wr.bag_ids, np.asarray(res)[wr.gather_idx])
+                elif self._service.pushdown:
                     out += res  # global combine of partial pools (fig 4b)
                 else:
                     rows, bags = res  # ranker-side pooling (fig 4a)
                     np.add.at(out, bags, rows)
+        for donor, slot, d_idx, bags in self._borrows:
+            # Borrowed rows: scatter from the donor batch's settled slot.
+            # The donor resolves on its own engine threads regardless of
+            # who waits first, so this cannot deadlock; in the FIFO serving
+            # pipeline the donor has already been retired by now.
+            if not donor._done.wait(remaining()):
+                raise TimeoutError("coalesced donor batch did not complete")
+            rows = donor.results[slot]
+            if rows is None:  # the donor WR itself failed
+                raise donor.error or RuntimeError(
+                    "coalesced donor subrequest failed"
+                )
+            np.add.at(out, bags, np.asarray(rows)[d_idx])
         self._out = self._service._finalize(
             out.reshape(B, F, D), self._mask, self._mean_normalize
         )
@@ -154,11 +233,32 @@ class PooledLookupService(HostLookupService):
         max_rows_per_subrequest: int = 64,
         gate: CreditGate | None = None,
         emulate_wire: bool = False,
+        dedup: bool = True,
+        range_coalesce: bool = True,
+        range_min_rows: int = 8,
+        inflight_coalesce: bool = True,
     ):
-        self._init_core(tables, table_array, pushdown)
+        self._init_core(tables, table_array, pushdown, dedup=dedup)
         if max_rows_per_subrequest <= 0:
             raise ValueError("max_rows_per_subrequest must be positive")
+        if range_min_rows < 2:
+            raise ValueError("range_min_rows must be >= 2")
         self.max_rows_per_subrequest = max_rows_per_subrequest
+        # §3.1.1 wire-dedup knobs (all no-ops unless dedup=True):
+        self.range_coalesce = range_coalesce
+        self.range_min_rows = range_min_rows  # shortest run worth a range WR
+        self.inflight_coalesce = inflight_coalesce
+        # In-flight row table: fused id -> (BatchHandle, slot, index within
+        # the WR's unique row list) for every row posted and not yet
+        # retired.  Guarded by _coalesce_lock (submissions may come from a
+        # drain thread as well as the serving thread).
+        self._inflight_rows: dict[int, tuple[BatchHandle, int, int]] = {}
+        self._coalesce_lock = threading.Lock()
+        # Dedup-layer counters (engine_summary):
+        self.deduped_rows = 0  # duplicate row refs removed before posting
+        self.coalesced_rows = 0  # rows borrowed from in-flight batches
+        self.coalesced_bytes = 0  # response bytes those borrows saved
+        self.range_wrs = 0  # WRs posted as contiguous range reads
         self.pool = RdmaEnginePool(
             self.servers,
             num_threads=num_threads,
@@ -180,7 +280,19 @@ class PooledLookupService(HostLookupService):
         num_bags: int,
         entry_bytes: int,
     ) -> list[LookupSubrequest]:
-        """Cut the sorted fan-out plan into per-shard, chunk-sized WRs."""
+        """Cut the sorted fan-out plan into per-shard WRs (no coalescing).
+
+        The pure per-batch WR cut: dedup + range coalescing when enabled,
+        the legacy duplicated chunking otherwise.  ``network_bytes`` prices
+        from this same cut, which is what makes accounting == movement.
+        In-flight coalescing (a function of live engine state, not of the
+        batch) is applied on top by ``lookup_async``.
+        """
+        if self.dedup:
+            subreqs, _, _ = self._dedup_subrequests(
+                fused, bag, num_bags, entry_bytes, borrow_table=None
+            )
+            return subreqs
         chunk = self.max_rows_per_subrequest
         subreqs: list[LookupSubrequest] = []
         for s in range(self.tables.num_shards):
@@ -201,10 +313,150 @@ class PooledLookupService(HostLookupService):
                         num_bags=num_bags,
                         pushdown=self.pushdown,
                         response_bytes=rbytes,
+                        request_bytes=8 * (c1 - c0),  # ids, dups included
                         slot=len(subreqs),
                     )
                 )
         return subreqs
+
+    def _dedup_subrequests(
+        self,
+        fused: np.ndarray,
+        bag: np.ndarray,
+        num_bags: int,
+        entry_bytes: int,
+        borrow_table: dict | None,
+    ) -> tuple[list[LookupSubrequest], list, dict]:
+        """Unique-row WR cut (+ borrow plan against the in-flight table).
+
+        Runs the dedup pass (one stable ``np.unique`` + inverse over the
+        shard-sorted plan), drops rows already on the wire for an earlier
+        batch (when ``borrow_table`` is given), folds sort-adjacent
+        survivors into range WRs, and chunks the scattered rest.  Returns
+        ``(subreqs, borrows, stats)`` where ``borrows`` are
+        ``(BatchHandle, slot, donor_idx, bag_ids)`` scatter records and
+        ``stats`` are the dedup-layer counter deltas.  Pure — no service
+        state is touched, so pricing callers (``network_bytes``) and
+        posting callers (``lookup_async``, which applies ``stats``) share
+        it without racing the counters.
+        """
+        uniq, inv, ubounds = self._dedup_plan(fused)
+        n_u = len(uniq)
+        stats = {
+            "deduped_rows": len(fused) - n_u,
+            "coalesced_rows": 0,
+            "coalesced_bytes": 0,
+            "range_wrs": 0,
+        }
+        row_payload = entry_bytes - 4  # contiguous payload: no per-row tag
+
+        # ---- in-flight coalescing: mark rows an earlier batch is fetching
+        owned = np.ones(n_u, bool)
+        donor_keys: list[tuple[BatchHandle, int]] = []
+        donor_of = np.full(n_u, -1, np.int64)  # index into donor_keys
+        donor_idx = np.zeros(n_u, np.int64)  # row index within the donor WR
+        if borrow_table:
+            key_index: dict[tuple[int, int], int] = {}
+            for k in range(n_u):
+                ent = borrow_table.get(int(uniq[k]))
+                if ent is None:
+                    continue
+                bh, slot, idx = ent
+                owned[k] = False
+                kk = (id(bh), slot)
+                j = key_index.get(kk)
+                if j is None:
+                    j = key_index[kk] = len(donor_keys)
+                    donor_keys.append((bh, slot))
+                donor_of[k] = j
+                donor_idx[k] = idx
+
+        # ---- WR packing over the owned unique rows, shard by shard
+        chunk = self.max_rows_per_subrequest
+        groups: list[tuple[np.ndarray, bool]] = []  # (uniq positions, range?)
+        group_of = np.full(n_u, -1, np.int64)
+        idx_in_group = np.zeros(n_u, np.int64)
+
+        def emit(pos: np.ndarray, contiguous: bool) -> None:
+            group_of[pos] = len(groups)
+            idx_in_group[pos] = np.arange(len(pos))
+            groups.append((pos, contiguous))
+
+        for s in range(self.tables.num_shards):
+            u0, u1 = int(ubounds[s]), int(ubounds[s + 1])
+            pos = np.flatnonzero(owned[u0:u1]) + u0
+            if not len(pos):
+                continue
+            if self.range_coalesce:
+                ids = uniq[pos]
+                edges = np.concatenate(
+                    ([0], np.flatnonzero(np.diff(ids) != 1) + 1, [len(ids)])
+                )
+                runs = np.stack([edges[:-1], edges[1:]], 1)
+                long = (runs[:, 1] - runs[:, 0]) >= self.range_min_rows
+                # A long run is ONE range WR however many rows it spans —
+                # a single contiguous read has one post and one payload,
+                # so chopping it at the chunk size would only manufacture
+                # WRs.  Short runs chunk like any scattered ids.
+                for r0, r1 in runs[long]:
+                    emit(pos[r0:r1], True)
+                scattered = np.concatenate(
+                    [pos[r0:r1] for r0, r1 in runs[~long]]
+                ) if (~long).any() else np.zeros(0, np.int64)
+            else:
+                scattered = pos
+            for c0 in range(0, len(scattered), chunk):
+                emit(scattered[c0 : c0 + chunk], False)
+
+        # ---- scatter assignment: every plan entry follows its unique row
+        ginv = group_of[inv] if n_u else np.zeros(0, np.int64)
+        order = np.argsort(ginv, kind="stable")  # stable: original order
+        sorted_g = ginv[order]
+        lo_of = np.searchsorted(sorted_g, np.arange(len(groups)))
+        hi_of = np.searchsorted(sorted_g, np.arange(len(groups)), side="right")
+        subreqs: list[LookupSubrequest] = []
+        for g, (pos, contiguous) in enumerate(groups):
+            ent = order[lo_of[g] : hi_of[g]]
+            n = len(pos)
+            if contiguous:
+                rbytes, qbytes = n * row_payload, 16  # (start, len) descriptor
+                stats["range_wrs"] += 1
+            else:
+                rbytes, qbytes = n * entry_bytes, 8 * n
+            subreqs.append(
+                LookupSubrequest(
+                    server=int(uniq[pos[0]]) // self.tables.rows_per_shard,
+                    row_ids=uniq[pos],
+                    bag_ids=bag[ent],
+                    num_bags=num_bags,
+                    pushdown=self.pushdown,
+                    response_bytes=rbytes,
+                    request_bytes=qbytes,
+                    slot=len(subreqs),
+                    dedup=True,
+                    gather_idx=idx_in_group[inv[ent]],
+                    contiguous=bool(contiguous),
+                )
+            )
+
+        # ---- borrow scatter records, grouped per (donor handle, slot)
+        borrows: list = []
+        if donor_keys:
+            bent = np.flatnonzero(ginv == -1)  # plan entries of borrowed rows
+            dkey = donor_of[inv[bent]]
+            border = bent[np.argsort(dkey, kind="stable")]
+            sorted_d = donor_of[inv[border]]
+            blo = np.searchsorted(sorted_d, np.arange(len(donor_keys)))
+            bhi = np.searchsorted(
+                sorted_d, np.arange(len(donor_keys)), side="right"
+            )
+            for j, (bh, slot) in enumerate(donor_keys):
+                ent = border[blo[j] : bhi[j]]
+                borrows.append((bh, slot, donor_idx[inv[ent]], bag[ent]))
+            n_borrowed = int((~owned).sum())
+            stats["coalesced_rows"] = n_borrowed
+            stats["coalesced_bytes"] = n_borrowed * entry_bytes
+        return subreqs, borrows, stats
 
     def lookup_async(
         self,
@@ -220,16 +472,65 @@ class PooledLookupService(HostLookupService):
         chew the gathers while the caller does something else (the dense
         stage of the previous batch, cache probes of the next one...).
         ``hedge_timeout`` arms the pool-side straggler hedge at wait time.
+
+        With ``dedup`` + ``inflight_coalesce``, rows still pending from an
+        earlier un-retired batch are *borrowed* rather than re-posted, and
+        the rows this batch does post are registered in the in-flight table
+        for the next batch to borrow in turn — the cross-batch half of the
+        §3.1.1 temporal-locality lever.
         """
         B, F, _ = indices.shape
         fused, bag, bounds, num_bags, D = self._plan_fanout(indices, mask)
         entry = 4 + D * self.servers[0].rows.dtype.itemsize
-        subreqs = self._shard_subrequests(fused, bag, bounds, num_bags, entry)
-        batch = self.pool.submit(subreqs) if subreqs else None
-        return LookupHandle(
+        borrows: list = []
+        if self.dedup:
+            with self._coalesce_lock:
+                table = (
+                    self._inflight_rows if self.inflight_coalesce else None
+                )
+                subreqs, borrows, stats = self._dedup_subrequests(
+                    fused, bag, num_bags, entry, borrow_table=table
+                )
+                batch = self.pool.submit(subreqs) if subreqs else None
+                if table is not None and batch is not None:
+                    for wr in subreqs:
+                        for i, fid in enumerate(wr.row_ids):
+                            self._inflight_rows[int(fid)] = (
+                                batch, wr.slot, i,
+                            )
+                # Counters move only when WRs are actually posted — the
+                # pricing path (network_bytes) never touches them.
+                self.deduped_rows += stats["deduped_rows"]
+                self.coalesced_rows += stats["coalesced_rows"]
+                self.coalesced_bytes += stats["coalesced_bytes"]
+                self.range_wrs += stats["range_wrs"]
+        else:
+            subreqs = self._shard_subrequests(
+                fused, bag, bounds, num_bags, entry
+            )
+            batch = self.pool.submit(subreqs) if subreqs else None
+        handle = LookupHandle(
             self, batch, (B, F, D), mask, mean_normalize,
             hedge_timeout=hedge_timeout,
+            borrows=borrows,
+            wire_response_bytes=sum(r.response_bytes for r in subreqs),
+            wire_request_bytes=sum(r.request_bytes for r in subreqs),
         )
+        if self.dedup and self.inflight_coalesce and batch is not None:
+            handle._reg_ids = [int(f) for wr in subreqs for f in wr.row_ids]
+        return handle
+
+    def _unregister(self, handle: LookupHandle) -> None:
+        """Purge a retired lookup's rows from the in-flight table (entries
+        a newer batch has not already overwritten by re-posting)."""
+        if not handle._reg_ids:
+            return
+        with self._coalesce_lock:
+            for fid in handle._reg_ids:
+                ent = self._inflight_rows.get(fid)
+                if ent is not None and ent[0] is handle._batch:
+                    del self._inflight_rows[fid]
+        handle._reg_ids = []
 
     def lookup(
         self,
@@ -258,6 +559,68 @@ class PooledLookupService(HostLookupService):
 
     # ------------------------------------------------------------------ stats
 
+    def network_bytes(self, indices: np.ndarray, mask: np.ndarray) -> int:
+        """Response bytes this service's WR cut actually moves per batch.
+
+        Accounting == movement: this prices the exact subrequest cut the
+        engine would post for this batch — the same cut ``lookup`` issues —
+        so it equals the sum of the posted WRs' ``response_bytes`` in every
+        wire protocol (pinned by a regression test).  That includes the
+        chunked-pushdown subtlety the legacy closed form got wrong here: a
+        bag straddling two chunks moves two partial-pool entries, and is
+        priced as two.  With ``dedup`` the cut is the unique-row protocol,
+        priced in closed form (no WR objects are built on the accounting
+        path): one entry per unique valid id, minus the 4-byte per-row tag
+        inside every dense run long enough to fold into a range WR — runs
+        break at shard boundaries exactly like the per-shard cut, and
+        chunk splits never change scattered totals.  Duplicates are priced
+        without dedup, because duplicates move.  In-flight coalescing can
+        move *less* than this (borrowed rows ride an earlier batch);
+        callers accounting a live pipeline should read
+        ``LookupHandle.wire_response_bytes`` instead.
+        """
+        D = self.servers[0].rows.shape[1]
+        entry = 4 + D * self.servers[0].rows.dtype.itemsize
+        if self.dedup:
+            offs = self.tables.field_offsets_array()
+            fused = indices.astype(np.int64) + offs[None, :, None]
+            return self.unique_response_bytes(
+                np.unique(fused[np.asarray(mask, bool)])
+            )
+        fused, bag, bounds, num_bags, _ = self._plan_fanout(indices, mask)
+        if not self.pushdown:
+            return len(fused) * entry  # one raw-row entry per hit
+        # Chunked pushdown: one partial entry per distinct bag per CHUNK —
+        # counted in closed form over (shard, chunk, bag) triples, no WR
+        # objects on the accounting path.
+        shard_of = np.repeat(
+            np.arange(self.tables.num_shards), np.diff(bounds)
+        )
+        local = np.arange(len(fused)) - bounds[shard_of]
+        cid = shard_of * (
+            len(fused) // self.max_rows_per_subrequest + 2
+        ) + local // self.max_rows_per_subrequest
+        pairs = np.stack([cid, bag], 1)
+        return len(np.unique(pairs, axis=0)) * entry
+
+    def unique_response_bytes(self, uniq: np.ndarray) -> int:
+        """Closed-form dedup pricing from a sorted unique id set: one entry
+        per unique row, minus the 4-byte per-row tag inside every dense run
+        long enough to fold into a range WR (runs break at shard boundaries
+        exactly like the per-shard cut; chunk splits never change scattered
+        totals, and long runs are never split)."""
+        D = self.servers[0].rows.shape[1]
+        entry = 4 + D * self.servers[0].rows.dtype.itemsize
+        if not self.range_coalesce or len(uniq) == 0:
+            return len(uniq) * entry
+        rps = self.tables.rows_per_shard
+        brk = np.flatnonzero(
+            (np.diff(uniq) != 1) | (uniq[1:] // rps != uniq[:-1] // rps)
+        ) + 1
+        lens = np.diff(np.concatenate(([0], brk, [len(uniq)])))
+        long_rows = int(lens[lens >= self.range_min_rows].sum())
+        return len(uniq) * entry - 4 * long_rows
+
     @property
     def virtual_latencies(self):
         """Per-batch virtual lookup latencies (seconds, bounded recent
@@ -265,9 +628,19 @@ class PooledLookupService(HostLookupService):
         return self.pool.virtual_latencies
 
     def engine_summary(self) -> dict:
-        return self.pool.summary()
+        s = self.pool.summary()
+        s.update(
+            dedup=self.dedup,
+            deduped_rows=self.deduped_rows,
+            coalesced_rows=self.coalesced_rows,
+            coalesced_bytes=self.coalesced_bytes,
+            range_wrs=self.range_wrs,
+        )
+        return s
 
     # ------------------------------------------------------------------ close
 
     def close(self) -> None:
         self.pool.close()
+        with self._coalesce_lock:
+            self._inflight_rows.clear()

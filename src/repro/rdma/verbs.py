@@ -34,6 +34,19 @@ The model, in verbs vocabulary:
     The state's ``now`` frontier only advances when a caller actually
     blocks on a batch (``RdmaEnginePool.sync_frontier``), so back-to-back
     submissions between waits are modeled as overlapped.
+  * **Deduplicated WRs** (§3.1.1 temporal locality at the wire): a WR with
+    ``dedup=True`` carries *unique* row ids — the service layer removed the
+    batch's duplicate references before posting and scatters the returned
+    rows back through ``gather_idx`` at the ranker.  Its response is priced
+    per unique row (``response_bytes``), its request per id
+    (``request_bytes``, 8 B each).  A dedup WR whose ids form one dense run
+    is a **range read** (``contiguous=True``): one WQE posts one contiguous
+    payload — no per-row wire tags (the payload is the raw row span) and a
+    single 16 B (start, len) request descriptor — so doorbell batching and
+    the credit window see fewer, larger WRs instead of many small ones.
+    The timing model needs no special case: fewer WRs means fewer
+    ``t_post``/``t_server`` charges, and the contiguous payload serializes
+    on the QP wire exactly like any other ``response_bytes``.
 
 ``plan_schedule`` runs this model as a deterministic discrete-event
 simulation over per-thread virtual clocks.  It decides which engine posts
@@ -95,7 +108,16 @@ class VerbsTiming:
 
 @dataclasses.dataclass
 class LookupSubrequest:
-    """One work request: a per-shard (sub-)slice of a batched lookup."""
+    """One work request: a per-shard (sub-)slice of a batched lookup.
+
+    With ``dedup=True`` the WR is the unique-row wire protocol of §3.1.1:
+    ``row_ids`` are unique (sorted ascending), the server returns the raw
+    rows once each, and the ranker scatters them into bags via
+    ``rows[gather_idx]`` aligned with ``bag_ids``.  ``contiguous=True``
+    marks a dedup WR whose ids form one dense run — a range read executed
+    as a single shard slice (no per-row gather) and priced as one post +
+    contiguous payload.
+    """
 
     server: int
     row_ids: np.ndarray
@@ -104,6 +126,11 @@ class LookupSubrequest:
     pushdown: bool
     response_bytes: int
     slot: int  # issue-order position == result slot (merge order)
+    # Unique-row wire protocol (§3.1.1 wire dedup):
+    dedup: bool = False
+    gather_idx: np.ndarray | None = None  # scatter map: rows[gather_idx]
+    contiguous: bool = False  # row_ids are one dense range (range read)
+    request_bytes: int = 0  # request-direction bytes (ids or descriptor)
     # Stamped by plan_schedule:
     engine: int = -1
     stolen: bool = False

@@ -7,6 +7,11 @@ together at host level.
   PooledLookupService                — §3.2 multi-threaded rdma engine pool
                                        (engine="legacy" keeps the old
                                        per-connection HostLookupService)
+  wire dedup (§3.1.1)                — `dedup=True`: miss subrequests carry
+                                       unique rows only, a pipelined batch
+                                       borrows rows already in flight for
+                                       its predecessor, and sort-adjacent
+                                       ids fold into range-read WRs
   cross-batch pipeline               — §3.2 follow-on: up to `pipeline_depth`
                                        batches in flight; batch N+1's cache
                                        probe + miss posting overlaps batch
@@ -138,6 +143,15 @@ class FlexEMRServer:
         emulate_wire: bool = False,  # pooled engine sleeps each WR's
         # virtual wire+server time for real: lookups become latency-bound
         # (the paper's regime) so pipelining is measurable without an RNIC
+        dedup: bool = True,  # §3.1.1 wire dedup: unique-row subrequests,
+        # in-flight coalescing across pipelined batches, range-coalesced
+        # WRs (pooled engine); the legacy engine gets the unique-row
+        # protocol too so A/Bs stay apples-to-apples.  Bit-equal on/off.
+        # NOTE: dedup REPLACES the fig-4b pushdown transfer for miss
+        # lookups (rows ship once, bags pool ranker-side) — the win scales
+        # with the traffic's duplicate fraction (dedup_bench reports the
+        # crossover as dedup_vs_pushdown_bytes); set False to restore
+        # per-bag partials on low-duplicate workloads.
     ):
         if pipeline_depth <= 0:
             raise ValueError("pipeline_depth must be positive")
@@ -152,11 +166,12 @@ class FlexEMRServer:
             # window); num_engines becomes the pool's thread count.
             self.service = PooledLookupService(
                 tables, table_np, num_threads=num_engines, pushdown=pushdown,
-                timing=timing, emulate_wire=emulate_wire,
+                timing=timing, emulate_wire=emulate_wire, dedup=dedup,
             )
         elif engine == "legacy":
             self.service = HostLookupService(
-                tables, table_np, num_engines=num_engines, pushdown=pushdown
+                tables, table_np, num_engines=num_engines, pushdown=pushdown,
+                dedup=dedup,
             )
         else:
             raise ValueError(f"unknown engine {engine!r} (pooled|legacy)")
@@ -189,6 +204,11 @@ class FlexEMRServer:
             refresh_every=0,
             prefetcher=prefetcher,
             track_bytes=track_bytes,
+            # The controller consumes each batch's heat from the dedup
+            # prepass published on the pending handle (admit phase, where
+            # it overlaps in-flight fetches) instead of re-aggregating raw
+            # references at retire time — see _retire_oldest.
+            collect_unique=controller is not None,
             **tier_remote,
         )
         # The cross-batch pipeline: _InflightBatch entries, oldest first.
@@ -365,8 +385,20 @@ class FlexEMRServer:
             [time.perf_counter() - r.arrival for r in reqs]
         )
         if self.controller is not None:
-            fused = batch["indices"].astype(np.int64) + self._offsets[None, :, None]
-            self.controller.observe(bucket, fused[batch["mask"]])
+            if pending.unique_ids is not None:
+                # Heat off the hot path: the admit-phase dedup prepass
+                # already aggregated this batch's (unique id, per-touch
+                # count) pairs — identical tracker feeding to the raw-
+                # reference path (regression-tested), with no np.unique
+                # serialized against the retire stage.
+                self.controller.observe(
+                    bucket,
+                    unique=(pending.unique_ids, pending.unique_counts),
+                )
+            else:
+                fused = batch["indices"].astype(np.int64) \
+                    + self._offsets[None, :, None]
+                self.controller.observe(bucket, fused[batch["mask"]])
             if self.metrics.batches % self.cache_refresh_every == 0:
                 self._apply_cache_plan(bucket)
         return {"bucket": bucket, "scores": scores, "latency_s": dt}

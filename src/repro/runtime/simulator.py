@@ -76,6 +76,17 @@ class SimConfig:
     prefetch_accuracy: float = 0.0
     prefetch_budget_frac: float = 0.0
     prefetch_reuse: float = 4.0
+    # §3.1.1 wire-dedup model: `dup_frac` is the duplicate fraction of a
+    # batch's row references (1 - uniques/references, measured from the
+    # workload); with `dedup_wire=True` the engine ships each distinct row
+    # once, so every posted subrequest's response payload shrinks by the
+    # duplicate share.  Duplicates make it onto the wire only in the miss
+    # path, so the factor applies to the same (1 - hit_rate) term the cache
+    # already scales.  Predicted byte reduction is 1 / (1 - dup_frac) — the
+    # quantity compare_dedup checks against the engine's measured wire
+    # counters (benchmarks/dedup_bench.py gates them within 10%).
+    dup_frac: float = 0.0
+    dedup_wire: bool = False
 
 
 class LookupSimulator:
@@ -126,13 +137,20 @@ class LookupSimulator:
         issued = 0
         events: list[tuple[float, int]] = []  # (time, batch_id) completions
         now = 0.0
+        wire_bytes = 0.0  # response payload moved (the dedup A/B quantity)
 
         fanout = max(2, cfg.n_servers // 2)
         hit_rate = self.effective_hit_rate()
+        if not 0.0 <= cfg.dup_frac < 1.0:
+            raise ValueError("dup_frac must be in [0, 1)")
+        # Wire dedup strips the duplicate share of every miss payload.
+        miss_frac = (1.0 - hit_rate) * (
+            (1.0 - cfg.dup_frac) if cfg.dedup_wire else 1.0
+        )
 
         def issue_batch(t_start: float) -> float:
             """Post one fan-out batch; returns completion time."""
-            nonlocal engine_free, unit_free, unit_owner
+            nonlocal engine_free, unit_free, unit_owner, wire_bytes
             # Each batch issues `fanout` subrequests drawn by popularity WITH
             # replacement — several subrequests of one lookup hitting the same
             # hot server is exactly the spatial locality / skew of §3.1-3.2.
@@ -143,11 +161,13 @@ class LookupSimulator:
                 # Fully-hit subrequests never leave the ranker.
                 p_all_hit = hit_rate ** cfg.rows_per_subrequest
                 active = active[self.rng.random(len(active)) >= p_all_hit]
-            # Miss bytes shrink with the (prefetch-boosted) hit rate; the
+            # Miss bytes shrink with the (prefetch-boosted) hit rate and —
+            # under wire dedup — with the duplicate fraction; the
             # piggybacked neighbor rows ride every posted response.
             sub_bytes = cfg.bytes_per_subrequest * (
-                (1.0 - hit_rate) + cfg.prefetch_budget_frac
+                miss_frac + cfg.prefetch_budget_frac
             )
+            wire_bytes += sub_bytes * len(active)
             # Even a fully-cached batch pays the ranker-local probe: floor
             # the completion at one t_post so hit_rate=1.0 yields a finite
             # (local-work-bound) throughput instead of a zero makespan.
@@ -209,6 +229,7 @@ class LookupSimulator:
             "throughput_batches_per_s": cfg.n_batches / makespan,
             "makespan_s": makespan,
             "effective_hit_rate": hit_rate,
+            "wire_bytes": wire_bytes,
             "engine_busy_s": engine_busy.tolist(),
             "engine_utilization": utilization.tolist(),
         }
@@ -360,6 +381,38 @@ def compare_prefetch(
         out[accs[0]]["throughput_batches_per_s"] / base
         if accs[0] == 0.0
         else float("nan")
+    )
+    return out
+
+
+def compare_dedup(dup_frac: float = 0.5, **overrides) -> dict:
+    """§3.1.1 wire-dedup sweep: duplicated vs unique-row transfers at a
+    measured duplicate fraction.
+
+    ``dup_frac`` is the workload's duplicate share of row references
+    (``1 - uniques / references`` — benchmarks/dedup_bench.py measures it
+    from the actual zipf stream and feeds it here).  Returns the two run
+    dicts plus:
+
+    * ``byte_reduction`` — wire bytes moved without dedup / with dedup;
+      by construction of the model this is ``1 / (1 - dup_frac)``, the
+      prediction the bench gates against the engine pool's measured
+      ``wire_response_bytes`` counters (within 10%);
+    * ``throughput_speedup`` — dedup-on over dedup-off batch throughput in
+      the wire-bound regime (smaller payloads serialize faster on the QP
+      wires; the real engine additionally saves per-WR posting, which the
+      bench measures directly from the verbs layer).
+    """
+    out = {}
+    for name, on in (("duplicated", False), ("dedup", True)):
+        cfg = SimConfig(dup_frac=dup_frac, dedup_wire=on, **overrides)
+        out[name] = LookupSimulator(cfg).run()
+    out["byte_reduction"] = (
+        out["duplicated"]["wire_bytes"] / max(1e-9, out["dedup"]["wire_bytes"])
+    )
+    out["throughput_speedup"] = (
+        out["dedup"]["throughput_batches_per_s"]
+        / out["duplicated"]["throughput_batches_per_s"]
     )
     return out
 

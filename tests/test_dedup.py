@@ -1,0 +1,518 @@
+"""§3.1.1 wire dedup: unique-row subrequests, in-flight coalescing, range
+WRs, byte accounting, and the heat/admission satellites.
+
+The load-bearing contracts:
+  * bit-equality — outputs identical with dedup on/off, across engines
+    (legacy + pooled), chunk boundaries, pipeline depths, and forced
+    hedging, including pathological all-duplicate traffic;
+  * accounting == movement — ``network_bytes`` equals the response bytes
+    the engine actually posts for the batch, in every wire protocol;
+  * in-flight coalescing — a pipelined batch borrows rows still pending
+    for its predecessor (no re-post), the table purges at retire, and a
+    fully-coalesced lookup posts nothing;
+  * range coalescing — sort-adjacent unique ids fold into contiguous WRs
+    priced as one post + tag-free payload;
+  * heat off the hot path — the controller fed from the dedup prepass
+    (unique ids + per-touch counts) produces bit-identical ``shard_heat``
+    to the raw-reference path;
+  * LFU admission counts duplicates per-touch (pinned semantics).
+"""
+import numpy as np
+import pytest
+
+from repro.core.adaptive_cache import (
+    AdaptiveCacheController,
+    EmaFrequencyTracker,
+    MemoryModel,
+)
+from repro.core.lookup_engine import HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data import synthetic as syn
+from repro.rdma import PooledLookupService, VerbsTiming
+
+
+def _specs():
+    return (
+        TableSpec("a", 500, nnz=4),
+        TableSpec("b", 300, nnz=2, pooling="mean"),
+        TableSpec("c", 40, nnz=1),
+    )
+
+
+def _setup(num_shards=4, dim=16):
+    specs = _specs()
+    tables = make_fused_tables(specs, dim, num_shards)
+    rng = np.random.default_rng(11)
+    tnp = (0.05 * rng.normal(size=(tables.total_rows, dim))).astype(
+        np.float32
+    )
+    return tables, tnp
+
+
+def _one_row_batch(tables, batch=16, row=7):
+    """Every valid reference is the SAME row: the all-duplicate extreme."""
+    F = len(tables.specs)
+    nnz = max(t.nnz for t in tables.specs)
+    idx = np.full((batch, F, nnz), row, np.int64)
+    msk = np.zeros((batch, F, nnz), bool)
+    msk[:, 0, :] = True
+    return idx, msk
+
+
+def _straddle_batch(tables, chunk=4):
+    """Duplicates engineered to straddle subrequest chunk boundaries: the
+    same id appears both early and late in one shard's span, so a chunked
+    duplicated cut would place its copies in different WRs."""
+    F = len(tables.specs)
+    nnz = max(t.nnz for t in tables.specs)
+    B = 8
+    idx = np.zeros((B, F, nnz), np.int64)
+    msk = np.zeros((B, F, nnz), bool)
+    ids = np.array([5, 9, 5, 13], np.int64)  # dup id 5, chunk=4 splits span
+    for b in range(B):
+        idx[b, 0, :] = np.roll(ids, b)
+    msk[:, 0, :] = True
+    return idx, msk
+
+
+# --------------------------------------------------------------- bit parity
+
+
+@pytest.mark.parametrize("make_batch", ["one_row", "straddle", "zipf"])
+def test_pathological_duplicates_bit_equal_legacy(rng, make_batch):
+    """All-one-row batches and chunk-straddling duplicates: every engine x
+    dedup combination returns the duplicated-transfer bits exactly."""
+    tables, tnp = _setup()
+    if make_batch == "one_row":
+        batches = [_one_row_batch(tables) for _ in range(3)]
+    elif make_batch == "straddle":
+        batches = [_straddle_batch(tables)]
+    else:
+        b = syn.recsys_batch(rng, tables.specs, 24, alpha=1.5)
+        batches = [(b["indices"], b["mask"])]
+
+    legacy = HostLookupService(tables, tnp)
+    try:
+        ref = [legacy.lookup(i, m) for i, m in batches]
+    finally:
+        legacy.close()
+
+    for dedup in (False, True):
+        svc = HostLookupService(tables, tnp, dedup=dedup)
+        try:
+            outs = [svc.lookup(i, m) for i, m in batches]
+        finally:
+            svc.close()
+        for a, b in zip(outs, ref):
+            np.testing.assert_array_equal(a, b)
+        for rc in (False, True):
+            pool = PooledLookupService(
+                tables, tnp, num_threads=4, dedup=dedup, range_coalesce=rc,
+                max_rows_per_subrequest=4,  # force chunk straddling
+            )
+            try:
+                outs = [pool.lookup(i, m) for i, m in batches]
+            finally:
+                pool.close()
+            for a, b in zip(outs, ref):
+                np.testing.assert_array_equal(a, b)
+
+
+def test_all_one_row_batch_posts_single_wr(rng):
+    """The all-duplicate extreme dedups to ONE unique row in one WR."""
+    tables, tnp = _setup()
+    idx, msk = _one_row_batch(tables, batch=32)
+    svc = PooledLookupService(tables, tnp, dedup=True)
+    try:
+        svc.lookup(idx, msk)
+        s = svc.engine_summary()
+        assert s["subrequests"] == 1
+        assert s["deduped_rows"] == int(msk.sum()) - 1
+    finally:
+        svc.close()
+
+
+# ----------------------------------------------------- accounting==movement
+
+
+@pytest.mark.parametrize("dedup", [False, True])
+@pytest.mark.parametrize("pushdown", [False, True])
+def test_pooled_accounting_equals_movement(rng, dedup, pushdown):
+    """network_bytes prices exactly the response bytes the pool posts —
+    duplicates pre-dedup, uniques post-dedup, range WRs tag-free."""
+    tables, tnp = _setup()
+    svc = PooledLookupService(
+        tables, tnp, num_threads=2, dedup=dedup, pushdown=pushdown,
+        max_rows_per_subrequest=8, inflight_coalesce=False,
+    )
+    try:
+        priced = 0
+        for _ in range(4):
+            b = syn.recsys_batch(rng, tables.specs, 24, alpha=1.4)
+            priced += svc.network_bytes(b["indices"], b["mask"])
+            svc.lookup(b["indices"], b["mask"])
+        assert priced == svc.pool.wire_response_bytes
+    finally:
+        svc.close()
+
+
+def test_legacy_dedup_network_bytes_counts_uniques(rng):
+    """Legacy accounting: dedup prices unique valid ids, non-dedup raw
+    prices every hit; their ratio is the duplicate fraction's inverse."""
+    tables, tnp = _setup()
+    b = syn.recsys_batch(rng, tables.specs, 32, alpha=1.5)
+    raw = HostLookupService(tables, tnp, pushdown=False)
+    ded = HostLookupService(tables, tnp, pushdown=False, dedup=True)
+    try:
+        entry = 4 + 16 * 4
+        offs = tables.field_offsets_array()
+        fused = b["indices"].astype(np.int64) + offs[None, :, None]
+        n_valid = int(b["mask"].sum())
+        n_uniq = len(np.unique(fused[b["mask"]]))
+        assert raw.network_bytes(b["indices"], b["mask"]) == n_valid * entry
+        assert ded.network_bytes(b["indices"], b["mask"]) == n_uniq * entry
+        assert n_uniq < n_valid  # the zipf stream really had duplicates
+    finally:
+        raw.close()
+        ded.close()
+
+
+def test_coalesced_lookup_accounts_only_posted_bytes(rng):
+    """A lookup that borrows in-flight rows reports only the bytes it
+    genuinely posted (movement), below the per-batch network_bytes price."""
+    tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=2, dedup=True)
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 24, alpha=1.4)
+        per_batch = svc.network_bytes(b["indices"], b["mask"])
+        h0 = svc.lookup_async(b["indices"], b["mask"])
+        h1 = svc.lookup_async(b["indices"], b["mask"])  # twin: borrows all
+        assert h0.wire_response_bytes == per_batch
+        assert h1.wire_response_bytes == 0
+        np.testing.assert_array_equal(h0.wait(), h1.wait())
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------- range coalescing
+
+
+def test_range_coalescing_folds_dense_runs():
+    """A contiguous id span folds into ONE range WR per shard: one post,
+    tag-free contiguous payload, slice-served, and bit-equal results."""
+    tables, tnp = _setup()
+    F = len(tables.specs)
+    nnz = max(t.nnz for t in tables.specs)
+    B = 16
+    rows_per = tables.rows_per_shard
+    span = min(rows_per, tables.specs[0].vocab, B * nnz)
+    idx = np.arange(B * nnz).reshape(B, nnz) % span
+    indices = np.zeros((B, F, nnz), np.int64)
+    indices[:, 0, :] = idx
+    msk = np.zeros((B, F, nnz), bool)
+    msk[:, 0, :] = True
+
+    on = PooledLookupService(
+        tables, tnp, dedup=True, range_coalesce=True,
+        max_rows_per_subrequest=8,
+    )
+    off = PooledLookupService(
+        tables, tnp, dedup=True, range_coalesce=False,
+        max_rows_per_subrequest=8,
+    )
+    try:
+        a = on.lookup(indices, msk)
+        b = off.lookup(indices, msk)
+        s_on, s_off = on.engine_summary(), off.engine_summary()
+    finally:
+        on.close()
+        off.close()
+    np.testing.assert_array_equal(a, b)
+    assert s_on["range_wrs"] >= 1
+    # the dense span collapses: far fewer WRs than the chunked cut
+    assert s_on["subrequests"] < s_off["subrequests"]
+    # tag-free contiguous payload: 4 bytes per unique row cheaper
+    assert s_on["wire_response_bytes"] == s_off["wire_response_bytes"] - 4 * span
+
+
+def test_range_wr_exceeds_chunk_size_as_one_post():
+    """A dense run longer than max_rows_per_subrequest stays ONE WR — a
+    contiguous read has one post and one payload; chopping it would only
+    manufacture WRs."""
+    tables, tnp = _setup()
+    svc = PooledLookupService(
+        tables, tnp, dedup=True, range_coalesce=True,
+        max_rows_per_subrequest=8,
+    )
+    try:
+        fused = np.arange(32, dtype=np.int64)  # one dense run, 4x chunk
+        bag = np.zeros(32, np.int64)
+        bounds = np.searchsorted(
+            svc.router.shard_of(fused),
+            np.arange(tables.num_shards + 1),
+        )
+        wrs = svc._shard_subrequests(fused, bag, bounds, 1, 4 + 16 * 4)
+        assert len(wrs) == 1 and wrs[0].contiguous
+        assert len(wrs[0].row_ids) == 32
+        assert wrs[0].request_bytes == 16  # one (start, len) descriptor
+    finally:
+        svc.close()
+
+
+# -------------------------------------------------- in-flight coalescing
+
+
+def test_inflight_coalescing_under_pipeline_and_forced_hedge(rng):
+    """Cross-batch coalescing at pipeline depth >= 2 with hedging forced:
+    later batches borrow the zipf hot head from earlier in-flight batches,
+    hedged duplicates race and cancel, and every output bit-equals the
+    legacy engine."""
+    tables, tnp = _setup()
+    batches = [syn.recsys_batch(rng, tables.specs, 24, alpha=1.5)
+               for _ in range(6)]
+    legacy = HostLookupService(tables, tnp)
+    try:
+        ref = [legacy.lookup(b["indices"], b["mask"]) for b in batches]
+    finally:
+        legacy.close()
+
+    for depth in (2, 4):
+        svc = PooledLookupService(
+            tables, tnp, num_threads=4, dedup=True,
+            # ~2ms of emulated server time per WR: a batch outlives the
+            # next batch's admit work, so the forced hedge really races
+            # in-flight duplicates and the borrows come from live fetches.
+            timing=VerbsTiming(t_server=2e-3), emulate_wire=True,
+        )
+        try:
+            outs: list = [None] * len(batches)
+            pending: list = []
+            for i, b in enumerate(batches):
+                pending.append(
+                    (i, svc.lookup_async(b["indices"], b["mask"],
+                                         hedge_timeout=0.0))
+                )
+                if len(pending) >= depth:
+                    j, h = pending.pop(0)
+                    outs[j] = h.wait()
+            for j, h in pending:
+                outs[j] = h.wait()
+            assert svc.coalesced_rows > 0  # the hot head was borrowed
+            assert svc.engine_summary()["hedged"] > 0
+            # retire purged every registration
+            assert not svc._inflight_rows
+        finally:
+            svc.close()
+        for a, b in zip(outs, ref):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_coalescing_disabled_posts_everything(rng):
+    tables, tnp = _setup()
+    svc = PooledLookupService(
+        tables, tnp, num_threads=2, dedup=True, inflight_coalesce=False
+    )
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 16)
+        h0 = svc.lookup_async(b["indices"], b["mask"])
+        h1 = svc.lookup_async(b["indices"], b["mask"])
+        assert svc.coalesced_rows == 0
+        assert h1.wire_response_bytes == h0.wire_response_bytes > 0
+        np.testing.assert_array_equal(h0.wait(), h1.wait())
+    finally:
+        svc.close()
+
+
+def test_borrower_fails_loudly_when_donor_wr_fails(rng):
+    """A borrowed row whose donor WR failed must fail the borrower's wait
+    (never silently merge zeros)."""
+    tables, tnp = _setup()
+    svc = PooledLookupService(
+        tables, tnp, num_threads=1, dedup=True,
+        timing=VerbsTiming(t_server=5e-3), emulate_wire=True,
+    )
+    try:
+        boom = RuntimeError("injected donor failure")
+
+        def throw(*a, **k):
+            raise boom
+
+        for s in svc.servers:
+            s.lookup_rows = throw
+            s.read_range = throw
+        b = syn.recsys_batch(rng, tables.specs, 8)
+        h0 = svc.lookup_async(b["indices"], b["mask"])
+        h1 = svc.lookup_async(b["indices"], b["mask"])  # borrows from h0
+        assert h1._borrows  # it really did coalesce
+        with pytest.raises(RuntimeError, match="injected donor failure"):
+            h0.wait()
+        with pytest.raises(RuntimeError, match="injected donor failure"):
+            h1.wait()
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------- heat off the hot path
+
+
+def test_shard_heat_identical_via_unique_path(rng):
+    """Feeding the controller from the dedup prepass (unique ids +
+    per-touch counts) produces bit-identical tracker state and shard_heat
+    to the raw-reference path."""
+    specs = _specs()
+    dim = 16
+
+    def controller():
+        return AdaptiveCacheController(
+            specs, dim,
+            MemoryModel(fixed_bytes=1 << 20, bytes_per_sample=1 << 10,
+                        hbm_bytes=1 << 28),
+        )
+
+    raw, uni = controller(), controller()
+    for _ in range(5):
+        b = syn.recsys_batch(rng, specs, 16, alpha=1.4)
+        ids = b["indices"].astype(np.int64)[b["mask"]]
+        raw.observe(16, ids)
+        u, c = np.unique(ids, return_counts=True)
+        uni.observe(16, unique=(u, c))
+    np.testing.assert_array_equal(raw.tracker._ids, uni.tracker._ids)
+    np.testing.assert_array_equal(raw.tracker._score, uni.tracker._score)
+    np.testing.assert_array_equal(
+        raw.shard_heat(100, 9), uni.shard_heat(100, 9)
+    )
+
+
+def test_tier_publishes_dedup_prepass(rng):
+    """lookup_begin with collect_unique exposes exactly np.unique of the
+    batch's valid fused ids with per-touch counts."""
+    from repro.hotcache.miss_path import TieredLookupService
+
+    tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=2)
+    tier = TieredLookupService(
+        svc, num_slots=64, refresh_every=0, collect_unique=True
+    )
+    try:
+        b = syn.recsys_batch(rng, tables.specs, 16, alpha=1.4)
+        p = tier.lookup_begin(b["indices"], b["mask"])
+        offs = tables.field_offsets_array()
+        fused = b["indices"].astype(np.int64) + offs[None, :, None]
+        u, c = np.unique(fused[b["mask"]], return_counts=True)
+        np.testing.assert_array_equal(p.unique_ids, u)
+        np.testing.assert_array_equal(p.unique_counts, c)
+        assert int(c.sum()) == int(b["mask"].sum())  # per-touch counts
+        p.wait()
+    finally:
+        svc.close()
+
+
+# -------------------------------------------------- per-touch LFU admission
+
+
+def test_lfu_admission_counts_duplicates_per_touch():
+    """PINNED: a row referenced k times in one batch earns k counts — one
+    duplicate-heavy batch can clear an admission threshold that unique
+    counting would take k batches to reach."""
+    tracker = EmaFrequencyTracker(decay=1.0)
+    batch = np.concatenate([np.full(5, 42, np.int64), [7]])
+    tracker.update(batch)
+    ids, scores = tracker.top_k_with_scores(2)
+    assert ids[0] == 42 and scores[0] == 5.0  # per-touch, not 1.0
+    assert scores[1] == 1.0
+
+
+def test_duplicate_heavy_batch_admits_through_tier(rng):
+    """End to end: the self-driven LFU refresh admits a row whose only
+    heat is within-batch duplication."""
+    from repro.hotcache.miss_path import TieredLookupService
+    from repro.hotcache.policy import AdmissionPolicy
+
+    tables, tnp = _setup()
+    svc = PooledLookupService(tables, tnp, num_threads=2)
+    tier = TieredLookupService(
+        svc, num_slots=64, refresh_every=1,
+        policy=AdmissionPolicy(admission_threshold=4.0, max_swap_in=8),
+    )
+    try:
+        idx, msk = _one_row_batch(tables, batch=2, row=7)  # 8 touches of id 7
+        tier.lookup(idx, msk)  # miss -> tracker.update -> refresh admits
+        assert tier.stats.admitted >= 1
+        slot, hit = tier.cache.probe(np.array([7]))
+        assert hit.all()  # a single duplicate-heavy batch crossed 4.0
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------- serving knob
+
+
+def test_serving_dedup_on_off_bit_equal(rng):
+    """FlexEMRServer scores are bit-equal with the wire dedup on or off,
+    while dedup genuinely shrinks the posted subrequest count."""
+    import jax
+
+    from repro.data.pipeline import BucketBatcher
+    from repro.models import recsys as R
+    from repro.runtime.serving import FlexEMRServer
+
+    tables_spec = (
+        TableSpec("big", 4000, nnz=4),
+        TableSpec("mid", 1000, nnz=2),
+        TableSpec("small", 64, nnz=1),
+    )
+    cfg = R.RecsysConfig(
+        name="t", arch="dlrm", tables=tables_spec, embed_dim=16, n_dense=13,
+        bottom_mlp=(64, 16), mlp=(64, 32),
+    )
+    params = R.init_params(cfg, jax.random.key(0))
+    tables = make_fused_tables(cfg.tables, cfg.embed_dim, 4)
+    reqs = []
+    for _ in range(24):
+        b = syn.recsys_batch(rng, cfg.tables, 1, n_dense=cfg.n_dense,
+                             alpha=1.4)
+        reqs.append({"indices": b["indices"][0], "mask": b["mask"][0],
+                     "dense": b["dense"][0]})
+
+    def serve(dedup):
+        server = FlexEMRServer(
+            cfg, params, tables, pipeline_depth=2, dedup=dedup,
+            batcher=BucketBatcher(buckets=(8,), max_wait=0.001),
+        )
+        try:
+            for r in reqs:
+                server.submit(r)
+            outs = []
+            while True:
+                o = server.step()
+                if o is None and server.metrics.requests >= len(reqs):
+                    break
+                if o is not None:
+                    outs.append(o["scores"])
+            deduped = server.service.deduped_rows
+        finally:
+            server.close()
+        return outs, deduped
+
+    on, deduped_on = serve(True)
+    off, deduped_off = serve(False)
+    assert len(on) == len(off) == len(reqs) // 8
+    for a, b in zip(on, off):
+        np.testing.assert_array_equal(a, b)
+    # zipf duplicates really left the wire on the dedup path
+    assert deduped_on > 0 and deduped_off == 0
+
+
+# ------------------------------------------------------- simulator model
+
+
+def test_simulator_compare_dedup_model():
+    from repro.runtime.simulator import SimConfig, compare_dedup
+
+    out = compare_dedup(dup_frac=0.6, n_batches=150)
+    assert out["byte_reduction"] == pytest.approx(1.0 / (1.0 - 0.6))
+    assert out["dedup"]["wire_bytes"] < out["duplicated"]["wire_bytes"]
+    with pytest.raises(ValueError):
+        from repro.runtime.simulator import LookupSimulator
+
+        LookupSimulator(SimConfig(dup_frac=1.5)).run()

@@ -449,17 +449,25 @@ def test_pool_overlapped_submits_share_frontier(rng):
     tables, tnp = _setup()
     svc = PooledLookupService(tables, tnp, num_threads=2)
     try:
-        b = syn.recsys_batch(rng, tables.specs, 16)
-        h0 = svc.lookup_async(b["indices"], b["mask"])
-        h1 = svc.lookup_async(b["indices"], b["mask"])  # before h0.wait()
+        b0 = syn.recsys_batch(rng, tables.specs, 16)
+        b1 = syn.recsys_batch(rng, tables.specs, 16)
+        h0 = svc.lookup_async(b0["indices"], b0["mask"])
+        h1 = svc.lookup_async(b1["indices"], b1["mask"])  # before h0.wait()
         assert h1._batch.v_end > h0._batch.v_end  # queued behind, virtually
-        a0, a1 = h0.wait(), h1.wait()
-        np.testing.assert_array_equal(a0, a1)
+        h0.wait(), h1.wait()
         # after the waits the frontier has advanced past both batches
         assert svc.pool.vstate.now >= h1._batch.v_end
-        h2 = svc.lookup_async(b["indices"], b["mask"])
+        h2 = svc.lookup_async(b1["indices"], b1["mask"])
         assert h2._batch.v_end > h1._batch.v_end
         h2.wait()
+        # An identical batch posted while its twin is still in flight is
+        # fully coalesced: every row borrows the pending fetch, no WR is
+        # posted at all, and the merged bits agree.
+        ha = svc.lookup_async(b0["indices"], b0["mask"])
+        hb = svc.lookup_async(b0["indices"], b0["mask"])
+        assert hb._batch is None and svc.coalesced_rows > 0
+        assert hb.wire_response_bytes == 0
+        np.testing.assert_array_equal(ha.wait(), hb.wait())
     finally:
         svc.close()
 

@@ -267,13 +267,27 @@ def test_failed_subrequest_raises_not_hangs(rng):
         b = syn.recsys_batch(rng, tables.specs, 16)
         boom = RuntimeError("injected server failure")
 
-        orig = svc.servers[0].lookup_pooled
-        svc.servers[0].lookup_pooled = lambda *a, **k: (_ for _ in ()).throw(
-            boom
+        def throw(*a, **k):
+            raise boom
+
+        # Break every server-side entry point: the dedup wire protocol
+        # gathers via lookup_rows/read_range, the legacy one via
+        # lookup_pooled.
+        orig = (
+            svc.servers[0].lookup_pooled,
+            svc.servers[0].lookup_rows,
+            svc.servers[0].read_range,
         )
+        svc.servers[0].lookup_pooled = throw
+        svc.servers[0].lookup_rows = throw
+        svc.servers[0].read_range = throw
         with pytest.raises(RuntimeError, match="injected server failure"):
             svc.lookup(b["indices"], b["mask"])
-        svc.servers[0].lookup_pooled = orig
+        (
+            svc.servers[0].lookup_pooled,
+            svc.servers[0].lookup_rows,
+            svc.servers[0].read_range,
+        ) = orig
         assert all(t.is_alive() for t in svc.pool.threads)
         # the pool still serves correctly afterwards
         out = svc.lookup(b["indices"], b["mask"])
