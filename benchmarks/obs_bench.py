@@ -1,0 +1,217 @@
+"""Observability overhead bench: tracing + metrics on vs off, same stream.
+
+The obs contract has three legs, all gated here on the pipeline-bench
+serving workload (wire-emulated, latency-bound — the regime the tracer is
+for):
+
+  1. **bit-equality** — scores with the tracer + registry fully on are
+     bit-identical to the plain run: observability watches the hot path,
+     never perturbs it.
+  2. **overhead <= 5%** — wall clock of the fully-instrumented run (Tracer
+     recording every span/instant, registry providers registered, one
+     snapshot at the end) within 5% of the uninstrumented run.  Both sides
+     take the best of ``reps`` alternating replays so host noise hits both
+     equally.
+  3. **sum-consistency** — the trace and the metrics snapshot agree: summed
+     ``lookup_stall`` span time == ``serve.lookup_seconds``, summed
+     ``dense`` == ``serve.dense_seconds``, summed ``credit_stall`` ==
+     ``rdma.pool.virtual_credit_stall_s``, ``steal`` instants ==
+     ``rdma.pool.virtual_steals`` — and the exported Chrome trace passes
+     ``tools/trace_export.py`` validation (nesting, no negative durations).
+
+``run(smoke=True)`` is the CI entry (`benchmarks/run.py --smoke`,
+``python -m benchmarks.obs_bench --smoke``).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.pipeline_bench import _build, _request_stream
+
+
+def _trace_export():
+    """Import tools/trace_export.py (not a package) by path."""
+    path = pathlib.Path(__file__).resolve().parents[1] / "tools" / \
+        "trace_export.py"
+    spec = importlib.util.spec_from_file_location("trace_export", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _serve(cfg, params, tables, timing, reqs, batch, tracer=None,
+           registry=None, snapshot=False):
+    """One replay; returns (scores, wall_s, server-metrics, engine, snap)."""
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import BucketBatcher
+    from repro.runtime.serving import FlexEMRServer
+
+    server = FlexEMRServer(
+        cfg, params, tables,
+        num_engines=4, pipeline_depth=2, hedge_timeout=None,
+        track_bytes=False, timing=timing, emulate_wire=True,
+        batcher=BucketBatcher(buckets=(batch,), max_wait=0.0005),
+        tracer=tracer, registry=registry,
+    )
+    try:
+        server._dense(
+            jnp.zeros((batch, cfg.num_fields, cfg.embed_dim), np.float32),
+            jnp.zeros((batch, cfg.n_dense), np.float32),
+        ).block_until_ready()
+        for r in reqs:
+            server.submit(r)
+        outs = []
+        t0 = time.perf_counter()
+        while True:
+            o = server.step()
+            if o is None:
+                break
+            outs.append(o["scores"])
+        snap = registry.snapshot() if snapshot and registry else None
+        wall = time.perf_counter() - t0
+        metrics = {
+            "lookup_seconds": server.metrics.lookup_seconds,
+            "dense_seconds": server.metrics.dense_seconds,
+            "hedges": server.metrics.hedges,
+        }
+        engine = server.engine_summary()
+    finally:
+        server.close()
+    return outs, wall, metrics, engine, snap
+
+
+def _close(a: float, b: float, rel: float = 1e-6, abs_: float = 1e-9) -> bool:
+    return abs(a - b) <= max(abs_, rel * max(abs(a), abs(b)))
+
+
+def run(seed: int = 0, smoke: bool = False, trace_out: str | None = None
+        ) -> dict:
+    from repro.obs import MetricsRegistry, Tracer
+
+    t_start = time.perf_counter()
+    n_batches = 10 if smoke else 24
+    batch = 32
+    cfg, params, tables, timing = _build(seed)
+    rng = np.random.default_rng(seed)
+    reqs = _request_stream(rng, cfg, n_batches, batch)
+
+    # ------------------------------------------- overhead A/B (best-of-reps)
+    reps = 3
+    wall_off = wall_on = float("inf")
+    scores_off = scores_on = None
+    traced = None  # (tracer, metrics, engine, snapshot) of the best on-run
+    for _ in range(reps):
+        outs, w, _, _, _ = _serve(cfg, params, tables, timing, reqs, batch)
+        if w < wall_off:
+            wall_off, scores_off = w, outs
+        tracer, registry = Tracer(), MetricsRegistry()
+        outs, w, metrics, engine, snap = _serve(
+            cfg, params, tables, timing, reqs, batch,
+            tracer=tracer, registry=registry, snapshot=True,
+        )
+        if w < wall_on:
+            wall_on, scores_on = w, outs
+            traced = (tracer, metrics, engine, snap)
+    overhead = wall_on / wall_off - 1.0
+    bit_equal = len(scores_off) == len(scores_on) and all(
+        np.array_equal(a, b) for a, b in zip(scores_off, scores_on)
+    )
+    tracer, metrics, engine, snap = traced
+
+    # ------------------------------------------------------- sum-consistency
+    def span_sum(name):
+        return sum(e["dur"] for e in tracer.events(name=name))
+
+    checks = {
+        "lookup_stall_vs_lookup_seconds": _close(
+            span_sum("lookup_stall"), metrics["lookup_seconds"]
+        ),
+        "dense_vs_dense_seconds": _close(
+            span_sum("dense"), metrics["dense_seconds"]
+        ),
+        "credit_stall_vs_virtual": _close(
+            span_sum("credit_stall"), engine["virtual_credit_stall_s"]
+        ),
+        "steals_vs_virtual": (
+            len(tracer.events(name="steal")) == engine["virtual_steals"]
+        ),
+        "hedge_arm_vs_hedges": (
+            len(tracer.events(name="hedge_arm")) == metrics["hedges"]
+        ),
+        "snapshot_has_namespaces": all(
+            any(k.startswith(p) for k in snap)
+            for p in ("serve.", "tier.", "rdma.pool.")
+        ),
+    }
+    sum_consistent = all(checks.values())
+
+    # ------------------------------------- export round-trip + validation
+    te = _trace_export()
+    if trace_out is None:
+        tmp = tempfile.NamedTemporaryFile(
+            "w", suffix=".trace.json", delete=False
+        )
+        trace_path = tmp.name
+        tmp.close()
+    else:
+        trace_path = trace_out
+    tracer.save(trace_path)
+    loaded = te.load(trace_path)
+    problems = te.validate(loaded)
+    stages = te.summarize(loaded)
+    if trace_out is None:
+        pathlib.Path(trace_path).unlink()
+
+    return {
+        "us_per_call": 1e6 * (time.perf_counter() - t_start),
+        "wall_off_s": wall_off,
+        "wall_on_s": wall_on,
+        "overhead_frac": overhead,
+        "bit_equal": bit_equal,
+        "events": len(tracer),
+        "dropped_events": tracer.dropped,
+        "sum_consistent": sum_consistent,
+        "sum_checks": checks,
+        "trace_valid": not problems,
+        "trace_problems": problems,
+        "stages": len(stages),
+        "snapshot_keys": len(snap),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale configuration (CI entry)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="also keep the instrumented run's Chrome trace "
+                    "here (default: validated then discarded)")
+    opts = ap.parse_args(argv)
+    out = run(seed=opts.seed, smoke=opts.smoke, trace_out=opts.trace_out)
+    for k, v in out.items():
+        print(f"{k}: {v}")
+    if not out["bit_equal"]:
+        raise SystemExit(
+            "obs invariance VIOLATED: scores moved with tracing enabled"
+        )
+    if not out["sum_consistent"]:
+        bad = [k for k, ok in out["sum_checks"].items() if not ok]
+        raise SystemExit(f"trace/metrics sum-consistency failed: {bad}")
+    if not out["trace_valid"]:
+        raise SystemExit(f"trace export invalid: {out['trace_problems']}")
+    if out["overhead_frac"] > 0.05:
+        raise SystemExit(
+            f"observability overhead {out['overhead_frac']:.1%} > 5% gate"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,10 @@ quantity), then the full §Roofline table assembled from the dry-run artifacts.
   PYTHONPATH=src python -m benchmarks.run --smoke    # seconds-scale subset
 
 ``--smoke`` runs the fast regression subset — the hotcache, prefetch, rdma,
-pipeline, and dedup benches in their shrunk configurations — so cache-,
-prefetch-, engine-, pipeline-, and wire-dedup-path regressions show up in
-the bench trajectory without paying for the full figure sweep.
+pipeline, dedup, and obs benches in their shrunk configurations — so
+cache-, prefetch-, engine-, pipeline-, wire-dedup-, and observability-path
+regressions show up in the bench trajectory without paying for the full
+figure sweep.
 """
 from __future__ import annotations
 
@@ -42,6 +43,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         dedup_bench,
         hotcache_bench,
+        obs_bench,
         pipeline_bench,
         prefetch_bench,
         rdma_bench,
@@ -79,6 +81,13 @@ def main(argv=None) -> None:
         f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
         f"sim_err={o['sim_rel_err']:.1%}"
     )
+    obs_derive = lambda o: (  # noqa: E731
+        f"overhead={o['overhead_frac']:.1%} "
+        f"events={o['events']} "
+        f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
+        f"sums={'ok' if o['sum_consistent'] else 'INCONSISTENT'} "
+        f"trace={'ok' if o['trace_valid'] else 'INVALID'}"
+    )
 
     if opts.smoke:
         bench(
@@ -105,6 +114,11 @@ def main(argv=None) -> None:
             "dedup_smoke",
             lambda: dedup_bench.run(smoke=True),
             dedup_derive,
+        )
+        bench(
+            "obs_smoke",
+            lambda: obs_bench.run(smoke=True),
+            obs_derive,
         )
         failed = [r for r in rows if r[2] == "FAILED"]
         if failed:
@@ -159,6 +173,7 @@ def main(argv=None) -> None:
     bench("rdma", rdma_bench.run, rdma_derive)
     bench("pipeline", pipeline_bench.run, pipeline_derive)
     bench("dedup", dedup_bench.run, dedup_derive)
+    bench("obs", obs_bench.run, obs_derive)
 
     print()
     try:

@@ -8,6 +8,10 @@ straggler hedging (cancel-the-loser), and the jit'd dense ranker.
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --no-pushdown    # fig-4a ablation
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --engine legacy  # pre-pool engine
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --pipeline-depth 1  # closed loop
+  PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 \
+      --trace trace.json --metrics-out metrics.json  # observability
+      # (load trace.json in https://ui.perfetto.dev, or summarize with
+      #  python tools/trace_export.py trace.json --summarize)
 """
 import os
 import sys

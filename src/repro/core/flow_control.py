@@ -19,6 +19,7 @@ import collections
 import dataclasses
 import heapq
 import threading
+import time
 from typing import Iterable
 
 
@@ -45,6 +46,7 @@ class CreditGate:
         self._inflight = 0
         self._cond = threading.Condition()
         self.stalls = 0  # acquire() calls that had to wait
+        self.stall_seconds = 0.0  # wall time posts spent blocked on the window
         self.peak = 0  # max simultaneous in-flight observed
 
     def acquire(self, n: int = 1, timeout: float | None = None) -> bool:
@@ -58,11 +60,15 @@ class CreditGate:
                 f"acquire({n}) exceeds the credit window ({self.max_credits})"
             )
         with self._cond:
-            if self._inflight + n > self.max_credits:
+            stalled = self._inflight + n > self.max_credits
+            if stalled:
                 self.stalls += 1
+                t0 = time.monotonic()
             ok = self._cond.wait_for(
                 lambda: self._inflight + n <= self.max_credits, timeout
             )
+            if stalled:
+                self.stall_seconds += time.monotonic() - t0
             if not ok:
                 return False
             self._inflight += n
@@ -85,6 +91,7 @@ class CreditGate:
         return {
             "max_credits": self.max_credits,
             "stalls": self.stalls,
+            "stall_seconds": self.stall_seconds,
             "peak": self.peak,
         }
 

@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core.adaptive_cache import EmaFrequencyTracker
 from repro.hotcache.policy import AdmissionPolicy, select_admissions
+from repro.obs.trace import CAT_CACHE, CAT_LOOKUP, CAT_PREFETCH, NULL_TRACER
 
 if TYPE_CHECKING:  # annotation-only: a runtime import would close the cycle
     from repro.core.lookup_engine import HostLookupService  # noqa: F401
@@ -270,10 +271,18 @@ class PendingTieredLookup:
     def wait(self, timeout: float | None = None) -> np.ndarray:
         if self._out is not None:
             return self._out
+        tracer = self._tier.tracer
         if self._remote is not None:
             self._sums += np.asarray(self._remote.wait(timeout), np.float64)
+        t_merge = tracer.now() if tracer.enabled else 0.0
         out = self._tier._mean_normalize(self._sums, self._mask)
         self._out = out.astype(np.float32)
+        if tracer.enabled:
+            tracer.complete(
+                "tier_merge", CAT_LOOKUP, t_merge, tracer.now() - t_merge,
+                args={"remote": self._remote is not None,
+                      "hedged": self.hedged},
+            )
         if self._do_refresh:
             self._tier.refresh()
         return self._out
@@ -313,10 +322,12 @@ class TieredLookupService:
         track_bytes: bool = True,
         prefetcher: "PrefetchEngine | None" = None,
         collect_unique: bool = False,
+        tracer=None,
     ):
         if remote_fn is not None and remote_async_fn is not None:
             raise ValueError("pass remote_fn OR remote_async_fn, not both")
         self.service = service
+        self.tracer = NULL_TRACER if tracer is None else tracer
         dim = service.servers[0].rows.shape[1]
         self.cache = HostHashCache(num_slots, dim, max_probes=max_probes)
         self.policy = policy or AdmissionPolicy()
@@ -370,6 +381,8 @@ class TieredLookupService:
         loop may begin batch N+1 while batch N is still pending without any
         tier-level locking.
         """
+        tracer = self.tracer
+        t_probe = tracer.now() if tracer.enabled else 0.0
         mask = np.asarray(mask, bool)
         fused = indices.astype(np.int64) + self._offsets[None, :, None]
         self.stats.batches += 1
@@ -418,10 +431,23 @@ class TieredLookupService:
             out = np.zeros(mask.shape[:2] + (self.cache.rows.shape[1],),
                            np.float64)
 
+        if tracer.enabled:
+            tracer.complete(
+                "probe", CAT_CACHE, t_probe, tracer.now() - t_probe,
+                args={"batch": self.stats.batches,
+                      "probed": int(mask.sum()), "hits": int(hit.sum())},
+            )
         remote = None
         cold = mask & ~hit
         if cold.any():
+            t_post = tracer.now() if tracer.enabled else 0.0
             remote = self._remote_begin(indices, cold)
+            if tracer.enabled:
+                tracer.complete(
+                    "post", CAT_LOOKUP, t_post, tracer.now() - t_post,
+                    args={"batch": self.stats.batches,
+                          "misses": int(cold.sum())},
+                )
             if self.track_bytes:
                 # Accounting == movement: a dedup-capable handle reports
                 # the response bytes its WRs genuinely posted (borrowed
@@ -482,20 +508,34 @@ class TieredLookupService:
         if not len(ids):
             self._decay()
             return 0
+        tracer = self.tracer
+        t_swap = tracer.now() if tracer.enabled else 0.0
         rows = self.service.gather_rows(ids)
         entry = 4 + rows.shape[1] * rows.dtype.itemsize
         self.stats.bytes_swap_in += len(ids) * entry
         n = self.cache.insert(ids, rows, freqs, self.policy.admission_threshold)
         self.stats.admitted += n
+        if tracer.enabled:
+            tracer.complete(
+                "swap_in", CAT_CACHE, t_swap, tracer.now() - t_swap,
+                args={"candidates": len(ids), "admitted": n,
+                      "bytes": len(ids) * entry},
+            )
         if self.prefetcher is not None:
             issued0 = self.prefetcher.stats.issued
             bytes0 = self.prefetcher.stats.bytes_prefetch
             n_pf = self.prefetcher.piggyback(ids, self.cache, self.service)
             self.stats.prefetch_admitted += n_pf
-            self.stats.prefetch_issued += self.prefetcher.stats.issued - issued0
-            self.stats.bytes_prefetch += (
-                self.prefetcher.stats.bytes_prefetch - bytes0
-            )
+            issued = self.prefetcher.stats.issued - issued0
+            self.stats.prefetch_issued += issued
+            pf_bytes = self.prefetcher.stats.bytes_prefetch - bytes0
+            self.stats.bytes_prefetch += pf_bytes
+            if tracer.enabled and issued:
+                tracer.instant(
+                    "prefetch_piggyback", CAT_PREFETCH, tracer.now(),
+                    args={"issued": issued, "admitted": n_pf,
+                          "bytes": pf_bytes},
+                )
             self._sync_prefetch_evictions()
         self._decay()
         return n

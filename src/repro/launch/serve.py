@@ -12,6 +12,13 @@ dealing — pool-hedged stragglers (cancel-the-loser duplicates on another
 engine thread), and the jit'd dense ranker stage.  The summary includes the
 pool's virtual p50/p99, per-thread utilization, steal counts, hedge and
 cancellation counts, and credit window under ``rdma_engine``.
+
+Observability (docs/OBSERVABILITY.md): ``--trace out.json`` records every
+batch's journey — admit/probe/post/stall/dense spans on the wall clock, the
+per-WR schedule on the verbs virtual clock — as Chrome-trace JSON, loadable
+in Perfetto as-is (and summarizable with ``tools/trace_export.py``);
+``--metrics-out metrics.json`` saves the unified registry snapshot (every
+subsystem's counters under one dotted namespace).
 """
 from __future__ import annotations
 
@@ -29,6 +36,7 @@ from repro.core.adaptive_cache import (
 from repro.core.sharding import TableSpec, make_fused_tables
 from repro.data import synthetic as syn
 from repro.models import recsys as R
+from repro.obs import Tracer, get_registry
 from repro.runtime.serving import FlexEMRServer
 from repro.utils import logger
 
@@ -64,11 +72,14 @@ def run(args) -> dict:
         max_rows=args.cache_rows,
         field_replication=False,
     )
+    tracer = Tracer() if getattr(args, "trace", None) else None
+    registry = get_registry()
     server = FlexEMRServer(
         cfg, params, tables, controller=controller,
         num_engines=args.num_engines, pushdown=not args.no_pushdown,
         engine=args.engine, pipeline_depth=args.pipeline_depth,
         dedup=not args.no_dedup,
+        tracer=tracer, registry=registry,
     )
     try:
         sizes = syn.diurnal_batches(rng, args.requests // 8, base=8, peak=64)
@@ -101,6 +112,15 @@ def run(args) -> dict:
         if eng is not None:
             out["rdma_engine"] = eng
         logger.info("serve summary: %s", json.dumps(out, indent=1))
+        if tracer is not None:
+            tracer.save(args.trace)
+            logger.info(
+                "trace: %d events -> %s (open in https://ui.perfetto.dev)",
+                len(tracer), args.trace,
+            )
+        if getattr(args, "metrics_out", None):
+            registry.save(args.metrics_out)
+            logger.info("metrics snapshot -> %s", args.metrics_out)
         return out
     finally:
         server.close()
@@ -125,6 +145,13 @@ def main():
                     help="disable the §3.1.1 wire dedup (unique-row "
                     "subrequests + in-flight coalescing + range WRs); "
                     "outputs are bit-equal either way")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="record per-batch spans + per-WR events and save "
+                    "Chrome-trace JSON here (Perfetto-loadable; see "
+                    "docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-out", type=str, default=None, metavar="PATH",
+                    help="save the unified metrics-registry snapshot "
+                    "(flat dotted-name JSON) here at exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     run(args)

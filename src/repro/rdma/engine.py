@@ -56,6 +56,14 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.flow_control import CreditGate
+from repro.obs.trace import (
+    CAT_HEDGE,
+    CAT_WIRE,
+    NULL_TRACER,
+    PID_VIRTUAL,
+    PID_WALL,
+    TID_VBATCH,
+)
 from repro.rdma.verbs import (
     LookupSubrequest,
     SchedulePlan,
@@ -140,8 +148,10 @@ class _EngineThread(threading.Thread):
         self.tid = tid
         self.deque: collections.deque = collections.deque()
         self.executed = 0
-        self.stolen = 0  # WRs this thread stole (real layer)
+        self.stolen = 0  # WRs this thread stole from siblings (steals in)
+        self.stolen_from = 0  # WRs siblings stole from this thread (steals out)
         self.cancelled = 0  # hedge losers this thread skipped or discarded
+        self.hedge_wins = 0  # hedge duplicates this thread won the slot with
 
     # All deque access happens under pool._cond's lock.
 
@@ -163,6 +173,7 @@ class _EngineThread(threading.Thread):
                 group = [victim.deque.pop() for _ in range(n)]
                 group.reverse()
                 self.stolen += len(group)
+                victim.stolen_from += len(group)
                 return group
         return None
 
@@ -186,9 +197,21 @@ class _EngineThread(threading.Thread):
             finally:
                 pool.gate.release(len(group))
 
+    def _cancel(self, wr: LookupSubrequest) -> None:
+        """Account a cancelled WR (a hedge twin beat it to the slot)."""
+        self.cancelled += 1
+        tracer = self.pool.tracer
+        if tracer.enabled:
+            tracer.instant(
+                "hedge_cancel", CAT_HEDGE, tracer.now(),
+                pid=PID_WALL, tid=100 + self.tid,
+                args={"slot": wr.slot, "server": wr.server,
+                      "dup": wr.hedge_dup},
+            )
+
     def _execute(self, wr: LookupSubrequest, handle: BatchHandle) -> None:
         if handle.settled(wr.slot):
-            self.cancelled += 1  # hedge already lost: skip the gather
+            self._cancel(wr)  # hedge already lost: skip the gather
             return
         if self.pool.emulate_wire:
             # Hold the WR for its wire + server time as a real (GIL-free)
@@ -199,7 +222,7 @@ class _EngineThread(threading.Thread):
             t = self.pool.timing
             time.sleep(t.t_server + wr.response_bytes / t.wire_bps)
             if handle.settled(wr.slot):
-                self.cancelled += 1  # the twin landed while we "flew"
+                self._cancel(wr)  # the twin landed while we "flew"
                 return
         try:
             srv = self.pool.servers[wr.server]
@@ -217,13 +240,23 @@ class _EngineThread(threading.Thread):
                 res = (srv.lookup_rows(wr.row_ids), wr.bag_ids)
         except Exception as exc:  # a bad WR must not kill the engine thread
             if not handle._settle(wr.slot, error=exc):
-                self.cancelled += 1  # losing twin failed: error dropped too
+                self._cancel(wr)  # losing twin failed: error dropped too
                 return
         else:
             if not handle._settle(wr.slot, result=res):
-                self.cancelled += 1  # raced a twin and lost: result dropped
+                self._cancel(wr)  # raced a twin and lost: result dropped
                 return
         self.executed += 1
+        if wr.hedge_dup:
+            # The straggler re-issue beat its primary to the slot.
+            self.hedge_wins += 1
+            tracer = self.pool.tracer
+            if tracer.enabled:
+                tracer.instant(
+                    "hedge_win", CAT_HEDGE, tracer.now(),
+                    pid=PID_WALL, tid=100 + self.tid,
+                    args={"slot": wr.slot, "server": wr.server},
+                )
 
 
 class RdmaEnginePool:
@@ -239,6 +272,7 @@ class RdmaEnginePool:
         work_stealing: bool = True,
         gate: CreditGate | None = None,
         emulate_wire: bool = False,
+        tracer=None,  # repro.obs.Tracer | None (NULL_TRACER: one branch off)
     ):
         if num_threads <= 0:
             raise ValueError("num_threads must be positive")
@@ -274,12 +308,18 @@ class RdmaEnginePool:
         self.virtual_busy = np.zeros(num_threads)
         self.virtual_span = 0.0  # absolute end of the virtual timeline
         self.virtual_steals = 0
+        self.virtual_credit_stall_s = 0.0  # window-blocked post time (virtual)
         self.doorbells = 0
         self.batches = 0
         self.subrequests = 0
         self.hedged = 0  # duplicate WRs issued by hedge()
         self.wire_response_bytes = 0  # response payload actually posted
         self.wire_request_bytes = 0  # request-direction ids / descriptors
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        if self.tracer.enabled:
+            for t in range(num_threads):
+                self.tracer.name_thread(PID_VIRTUAL, t, f"engine-{t}")
+                self.tracer.name_thread(PID_WALL, 100 + t, f"rdma-pool-{t}")
         self.threads = [_EngineThread(self, t) for t in range(num_threads)]
         for t in self.threads:
             t.start()
@@ -296,6 +336,7 @@ class RdmaEnginePool:
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError("submit() on a closed RdmaEnginePool")
+            bid = self.batches  # trace correlation key for this batch's WRs
             plan = plan_schedule(
                 subreqs,
                 self.num_threads,
@@ -305,6 +346,8 @@ class RdmaEnginePool:
                 work_stealing=self.work_stealing,
                 affinity=self._affinity,
                 state=self.vstate,
+                tracer=self.tracer if self.tracer.enabled else None,
+                batch_id=bid,
             )
             handle = BatchHandle(
                 len(subreqs), plan.makespan, v_end=plan.end
@@ -318,7 +361,16 @@ class RdmaEnginePool:
             self.virtual_busy += np.asarray(plan.busy)
             self.virtual_span = max(self.virtual_span, plan.end)
             self.virtual_steals += plan.steals
+            self.virtual_credit_stall_s += plan.credit_stall
             self.doorbells += plan.doorbells
+            if self.tracer.enabled and subreqs:
+                self.tracer.complete(
+                    "lookup_batch", CAT_WIRE, plan.arrival, plan.makespan,
+                    pid=PID_VIRTUAL, tid=TID_VBATCH,
+                    args={"batch": bid, "wrs": len(subreqs),
+                          "steals": plan.steals,
+                          "credit_stall_s": plan.credit_stall},
+                )
             if subreqs:
                 with self._cond:
                     # Real dispatch follows the virtual assignment (affinity
@@ -360,7 +412,9 @@ class RdmaEnginePool:
                 target = min(
                     others or self.threads, key=lambda t: (len(t.deque), t.tid)
                 )
-                target.deque.appendleft((dataclasses.replace(wr), handle))
+                target.deque.appendleft(
+                    (dataclasses.replace(wr, hedge_dup=True), handle)
+                )
                 # A posted duplicate moves wire bytes like any other WR
                 # (a loser cancelled before execution is the lucky case;
                 # counting at post keeps the counter an upper bound the
@@ -412,24 +466,39 @@ class RdmaEnginePool:
         return {q: float(np.percentile(lat, q)) for q in qs}
 
     def summary(self) -> dict:
-        pct = self.latency_percentiles()
-        return {
-            "num_threads": self.num_threads,
-            "batches": self.batches,
-            "subrequests": self.subrequests,
-            "wire_response_bytes": self.wire_response_bytes,
-            "wire_request_bytes": self.wire_request_bytes,
-            "doorbells": self.doorbells,
-            "virtual_steals": self.virtual_steals,
-            "real_steals": sum(t.stolen for t in self.threads),
-            "executed": [t.executed for t in self.threads],
-            "hedged": self.hedged,
-            "hedge_cancelled": sum(t.cancelled for t in self.threads),
-            "utilization": self.utilization().tolist(),
-            "p50_latency_us": 1e6 * pct[50.0],
-            "p99_latency_us": 1e6 * pct[99.0],
-            "credit_window": self.gate.summary(),
-        }
+        """One consistent snapshot of the pool's counters.
+
+        Taken under the submit lock *and* the pool condition lock — the same
+        order ``submit`` nests them — so the virtual-layer counters, the
+        per-thread deque depths, and the per-thread tallies are read
+        race-free against live engine threads instead of mid-update.
+        """
+        with self._submit_lock, self._cond:
+            pct = self.latency_percentiles()
+            th = self.threads
+            return {
+                "num_threads": self.num_threads,
+                "batches": self.batches,
+                "subrequests": self.subrequests,
+                "wire_response_bytes": self.wire_response_bytes,
+                "wire_request_bytes": self.wire_request_bytes,
+                "doorbells": self.doorbells,
+                "virtual_steals": self.virtual_steals,
+                "virtual_credit_stall_s": self.virtual_credit_stall_s,
+                "real_steals": sum(t.stolen for t in th),
+                "executed": [t.executed for t in th],
+                # Per-thread gauges (live engine state at snapshot time):
+                "queue_depth": [len(t.deque) for t in th],
+                "steals_in": [t.stolen for t in th],
+                "steals_out": [t.stolen_from for t in th],
+                "hedged": self.hedged,
+                "hedge_wins": sum(t.hedge_wins for t in th),
+                "hedge_cancelled": sum(t.cancelled for t in th),
+                "utilization": self.utilization().tolist(),
+                "p50_latency_us": 1e6 * pct[50.0],
+                "p99_latency_us": 1e6 * pct[99.0],
+                "credit_window": self.gate.summary(),
+            }
 
     # ------------------------------------------------------------------ close
 

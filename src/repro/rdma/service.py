@@ -84,6 +84,7 @@ import numpy as np
 from repro.core.flow_control import CreditGate
 from repro.core.lookup_engine import HostLookupService
 from repro.core.sharding import FusedTables
+from repro.obs.trace import CAT_HEDGE, CAT_LOOKUP, CAT_WIRE, NULL_TRACER
 from repro.rdma.engine import BatchHandle, RdmaEnginePool
 from repro.rdma.verbs import LookupSubrequest, VerbsTiming
 
@@ -153,6 +154,8 @@ class LookupHandle:
         B, F, D = self._shape
         out = np.zeros((B * F, D), np.float64)
         bh = self._batch
+        tracer = self._service.tracer
+        t_merge = tracer.now() if tracer.enabled else 0.0
         t0 = time.monotonic()
 
         def remaining():
@@ -172,7 +175,14 @@ class LookupHandle:
                 # at most once — a wait() retried after a TimeoutError must
                 # not stack further duplicates behind the first set.
                 self._hedge_armed = True
-                self.hedged += self._service.pool.hedge(bh)
+                n_hedged = self._service.pool.hedge(bh)
+                self.hedged += n_hedged
+                if tracer.enabled and n_hedged:
+                    tracer.instant(
+                        "hedge_arm", CAT_HEDGE, tracer.now(),
+                        args={"wrs": n_hedged,
+                              "timeout_s": self.hedge_timeout},
+                    )
             try:
                 # The hedge-arming wait spent part of the caller's budget.
                 results = bh.wait(remaining())
@@ -214,6 +224,15 @@ class LookupHandle:
         self._out = self._service._finalize(
             out.reshape(B, F, D), self._mask, self._mean_normalize
         )
+        if tracer.enabled:
+            tracer.complete(
+                "merge", CAT_LOOKUP, t_merge, tracer.now() - t_merge,
+                args={
+                    "wrs": 0 if bh is None else len(bh.wrs),
+                    "borrows": len(self._borrows),
+                    "hedged": self.hedged,
+                },
+            )
         return self._out
 
 
@@ -237,8 +256,10 @@ class PooledLookupService(HostLookupService):
         range_coalesce: bool = True,
         range_min_rows: int = 8,
         inflight_coalesce: bool = True,
+        tracer=None,
     ):
         self._init_core(tables, table_array, pushdown, dedup=dedup)
+        self.tracer = NULL_TRACER if tracer is None else tracer
         if max_rows_per_subrequest <= 0:
             raise ValueError("max_rows_per_subrequest must be positive")
         if range_min_rows < 2:
@@ -268,6 +289,7 @@ class PooledLookupService(HostLookupService):
             work_stealing=work_stealing,
             gate=gate,
             emulate_wire=emulate_wire,
+            tracer=self.tracer,
         )
 
     # ----------------------------------------------------------------- lookup
@@ -504,6 +526,20 @@ class PooledLookupService(HostLookupService):
                 self.coalesced_rows += stats["coalesced_rows"]
                 self.coalesced_bytes += stats["coalesced_bytes"]
                 self.range_wrs += stats["range_wrs"]
+            if self.tracer.enabled:
+                if stats["coalesced_rows"]:
+                    self.tracer.instant(
+                        "inflight_borrow", CAT_WIRE, self.tracer.now(),
+                        args={"rows": stats["coalesced_rows"],
+                              "bytes": stats["coalesced_bytes"],
+                              "donors": len(borrows)},
+                    )
+                if stats["range_wrs"]:
+                    self.tracer.instant(
+                        "range_coalesce", CAT_WIRE, self.tracer.now(),
+                        args={"range_wrs": stats["range_wrs"],
+                              "deduped_rows": stats["deduped_rows"]},
+                    )
         else:
             subreqs = self._shard_subrequests(
                 fused, bag, bounds, num_bags, entry

@@ -131,6 +131,9 @@ class LookupSubrequest:
     gather_idx: np.ndarray | None = None  # scatter map: rows[gather_idx]
     contiguous: bool = False  # row_ids are one dense range (range read)
     request_bytes: int = 0  # request-direction bytes (ids or descriptor)
+    # True on the duplicate WRs RdmaEnginePool.hedge re-issues (so the real
+    # layer can attribute hedge wins/cancellations to the right side).
+    hedge_dup: bool = False
     # Stamped by plan_schedule:
     engine: int = -1
     stolen: bool = False
@@ -148,6 +151,7 @@ class SchedulePlan:
     doorbells: int  # doorbell batches rung
     arrival: float = 0.0  # absolute virtual submission time
     end: float = 0.0  # absolute virtual completion of the slowest WR
+    credit_stall: float = 0.0  # virtual seconds posts spent window-blocked
 
 
 @dataclasses.dataclass
@@ -213,6 +217,8 @@ def plan_schedule(
     work_stealing: bool = True,
     affinity: np.ndarray | None = None,
     state: VerbsState | None = None,
+    tracer=None,
+    batch_id: int = -1,
 ) -> SchedulePlan:
     """Deterministic virtual-time schedule of one batch's work requests.
 
@@ -229,12 +235,29 @@ def plan_schedule(
     horizons, and the outstanding-credit heap carry into the next batch, and
     this batch arrives at ``state.now``.  ``makespan`` is the batch latency
     relative to that arrival; ``end`` is the absolute completion.
+
+    ``tracer`` (a ``repro.obs.Tracer``) turns the virtual clocks into span
+    timestamps: one ``wr`` span per work request (post -> wire -> server, on
+    the engine's virtual-timeline row), ``doorbell`` instants, ``steal``
+    instants, and ``credit_stall`` spans for posts the in-flight window
+    blocked — all tagged with ``batch_id`` so they nest inside the batch's
+    ``lookup_batch`` span.  ``None`` (the default) emits nothing.
     """
     if num_engines <= 0:
         raise ValueError("num_engines must be positive")
     # A doorbell group must fit the credit window or its own post could
     # never be admitted (same clamp RdmaEnginePool applies).
     doorbell_batch = max(1, min(doorbell_batch, max_inflight))
+    if tracer is not None and not tracer.enabled:
+        tracer = None
+    if tracer is not None:
+        # Deferred import: verbs must stay importable below repro.obs.
+        from repro.obs.trace import (
+            CAT_CREDIT,
+            CAT_STEAL,
+            CAT_WIRE,
+            PID_VIRTUAL,
+        )
     if state is None:
         state = VerbsState.fresh(num_engines)
     arrival = state.now
@@ -258,6 +281,7 @@ def plan_schedule(
     assignments: list[list] = [[] for _ in range(num_engines)]
     steals = 0
     doorbells = 0
+    credit_stall = 0.0
     end = arrival
 
     while any(queues):
@@ -278,6 +302,12 @@ def plan_schedule(
                 group.append(queues[victim].pop())
             group.reverse()  # preserve the victim's tail in FIFO order
             steals += len(group)
+            if tracer is not None:
+                tracer.instant(
+                    "steal", CAT_STEAL, clock[tid], pid=PID_VIRTUAL, tid=tid,
+                    args={"batch": batch_id, "victim": victim,
+                          "wrs": len(group)},
+                )
             clock[tid] += timing.t_steal
             busy[tid] += timing.t_steal
             for r in group:
@@ -306,10 +336,24 @@ def plan_schedule(
             start = max(
                 start, heapq.heappop(inflight) + timing.t_credit_return
             )
+        if start > clock[tid]:
+            credit_stall += start - clock[tid]
+            if tracer is not None:
+                tracer.complete(
+                    "credit_stall", CAT_CREDIT, clock[tid],
+                    start - clock[tid], pid=PID_VIRTUAL, tid=tid,
+                    args={"batch": batch_id, "wrs": len(group)},
+                )
 
         t = start + timing.t_doorbell
         doorbells += 1
+        if tracer is not None:
+            tracer.instant(
+                "doorbell", CAT_WIRE, start, pid=PID_VIRTUAL, tid=tid,
+                args={"batch": batch_id, "wrs": len(group)},
+            )
         for r in group:
+            post_start = t
             t += timing.t_post
             qk = (tid, r.server)
             wire = r.response_bytes / timing.wire_bps
@@ -320,6 +364,15 @@ def plan_schedule(
             r.engine = tid
             assignments[tid].append(r)
             end = max(end, r.v_complete)
+            if tracer is not None:
+                tracer.complete(
+                    "range_read" if r.contiguous else "wr", CAT_WIRE,
+                    post_start, r.v_complete - post_start,
+                    pid=PID_VIRTUAL, tid=tid,
+                    args={"batch": batch_id, "slot": r.slot,
+                          "server": r.server, "rows": len(r.row_ids),
+                          "bytes": r.response_bytes, "stolen": r.stolen},
+                )
         busy[tid] += t - start
         clock[tid] = t
 
@@ -338,4 +391,5 @@ def plan_schedule(
         doorbells=doorbells,
         arrival=arrival,
         end=end,
+        credit_stall=credit_stall,
     )

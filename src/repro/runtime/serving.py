@@ -53,6 +53,14 @@ from repro.core.sharding import FusedTables
 from repro.data.pipeline import BucketBatcher
 from repro.hotcache.miss_path import HostHashCache, TieredLookupService
 from repro.models import recsys as R
+from repro.obs.metrics import Histogram, get_registry
+from repro.obs.trace import (
+    CAT_DENSE,
+    CAT_LOOKUP,
+    CAT_SERVE,
+    NULL_TRACER,
+    TID_RANKER,
+)
 from repro.rdma.service import PooledLookupService
 from repro.utils import logger
 
@@ -73,7 +81,11 @@ class ServeMetrics:
     prefetch_issued: int = 0  # rows fetched speculatively
     prefetch_hits: int = 0  # hits served by prefetched-before-first-touch rows
     prefetch_evicted: int = 0  # speculative rows evicted before any hit
-    latencies: list = dataclasses.field(default_factory=list)
+    # Bounded-memory request-latency distribution (obs.metrics.Histogram):
+    # exact + interpolated through the warmup window, P² streaming after —
+    # a server can run forever without this growing, and small-sample p99
+    # interpolates instead of floor-indexing into the sorted list.
+    latency_hist: Histogram = dataclasses.field(default_factory=Histogram)
 
     @property
     def bytes_saved(self) -> int:
@@ -84,15 +96,19 @@ class ServeMetrics:
             - self.bytes_prefetch
         )
 
+    def observe_latency(self, seconds: float) -> None:
+        self.latency_hist.add(seconds)
+
     def summary(self) -> dict:
-        lat = sorted(self.latencies) or [0.0]
+        lat = self.latency_hist
         return {
             "batches": self.batches,
             "requests": self.requests,
             "hit_rate": self.cache_hits / max(1, self.lookups),
             "hedges": self.hedges,
-            "mean_latency_ms": 1e3 * float(np.mean(lat)),
-            "p99_latency_ms": 1e3 * lat[int(0.99 * (len(lat) - 1))],
+            "mean_latency_ms": 1e3 * lat.mean,
+            "p50_latency_ms": 1e3 * lat.quantile(0.5),
+            "p99_latency_ms": 1e3 * lat.quantile(0.99),
             "lookup_seconds": self.lookup_seconds,
             "dense_seconds": self.dense_seconds,
             "network_bytes": self.bytes_network,
@@ -152,12 +168,20 @@ class FlexEMRServer:
         # with the traffic's duplicate fraction (dedup_bench reports the
         # crossover as dedup_vs_pushdown_bytes); set False to restore
         # per-bag partials on low-duplicate workloads.
+        tracer=None,  # obs.trace.Tracer | None: per-batch spans + per-WR
+        # events on the wall + virtual timelines (docs/OBSERVABILITY.md).
+        # None = NULL_TRACER: the hot path pays one branch per site.
+        registry=None,  # obs.metrics.MetricsRegistry override (default:
+        # the process-wide registry); every subsystem summary() registers
+        # as a provider under its dotted namespace.
     ):
         if pipeline_depth <= 0:
             raise ValueError("pipeline_depth must be positive")
         self.cfg = cfg
         self.params = params
         self.tables = tables
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.registry = registry or get_registry()
         table_np = np.asarray(params["emb"]["table"])
         self.table_np = table_np
         if engine == "pooled":
@@ -167,6 +191,7 @@ class FlexEMRServer:
             self.service = PooledLookupService(
                 tables, table_np, num_threads=num_engines, pushdown=pushdown,
                 timing=timing, emulate_wire=emulate_wire, dedup=dedup,
+                tracer=self.tracer,
             )
         elif engine == "legacy":
             self.service = HostLookupService(
@@ -209,6 +234,7 @@ class FlexEMRServer:
             # it overlaps in-flight fetches) instead of re-aggregating raw
             # references at retire time — see _retire_oldest.
             collect_unique=controller is not None,
+            tracer=self.tracer,
             **tier_remote,
         )
         # The cross-batch pipeline: _InflightBatch entries, oldest first.
@@ -216,6 +242,21 @@ class FlexEMRServer:
         self._plan_swap_in_bytes = 0
         self._dense = jax.jit(self._dense_fn)
         self._offsets = tables.field_offsets_array()
+        # Unified metrics namespace (docs/OBSERVABILITY.md): every
+        # subsystem's summary() becomes a provider, so ONE snapshot covers
+        # the whole serving process.  Provider registration REPLACES, so a
+        # rebuilt server takes over the namespace instead of
+        # double-reporting.
+        self.registry.register_provider("serve", self.metrics.summary)
+        self.registry.register_provider("tier", self._tiered.stats.summary)
+        if hasattr(self.service, "engine_summary"):
+            self.registry.register_provider(
+                "rdma.pool", self.service.engine_summary
+            )
+        if prefetcher is not None:
+            self.registry.register_provider(
+                "prefetch", prefetcher.stats.summary
+            )
 
     # ------------------------------------------------------------ dense part
 
@@ -343,6 +384,8 @@ class FlexEMRServer:
         if polled is None:
             return False
         bucket, reqs = polled
+        tracer = self.tracer
+        t_adm = tracer.now() if tracer.enabled else 0.0
         t0 = time.perf_counter()
         F, NNZ = self.cfg.num_fields, self.cfg.max_nnz
         batch = self.batcher.pad_batch(
@@ -355,6 +398,13 @@ class FlexEMRServer:
             },
         )
         pending = self._tiered.lookup_begin(batch["indices"], batch["mask"])
+        if tracer.enabled:
+            tracer.complete(
+                "admit", CAT_SERVE, t_adm, tracer.now() - t_adm,
+                tid=TID_RANKER,
+                args={"bucket": bucket, "requests": len(reqs),
+                      "inflight": len(self._pipeline) + 1},
+            )
         self._pipeline.append(
             _InflightBatch(bucket, reqs, batch, pending, t0)
         )
@@ -363,27 +413,50 @@ class FlexEMRServer:
     def _retire_oldest(self) -> dict:
         """Wait on the oldest in-flight batch, run its dense stage, account."""
         bucket, reqs, batch, pending, t0 = self._pipeline.popleft()
+        tracer = self.tracer
         t_wait = time.perf_counter()
         pooled = pending.wait()
+        stall = time.perf_counter() - t_wait
         if self.engine == "pooled":
             # Ranker-thread stall on the miss path: with the pipeline full
             # this is what's LEFT of lookup latency after the overlap (the
             # legacy hedge path accounts its own full lookup time instead).
-            self.metrics.lookup_seconds += time.perf_counter() - t_wait
+            # The "lookup_stall" span is THIS delta — span durations and
+            # serve.lookup_seconds sum-check against each other.
+            self.metrics.lookup_seconds += stall
             if pending.hedged:
                 self.metrics.hedges += 1
+        if tracer.enabled:
+            tracer.complete(
+                "lookup_stall", CAT_LOOKUP, tracer.now() - stall, stall,
+                tid=TID_RANKER,
+                args={"bucket": bucket, "hedged": pending.hedged},
+            )
         self._sync_tier_metrics()
         t1 = time.perf_counter()
         scores = np.asarray(
             self._dense(jnp.asarray(pooled), jnp.asarray(batch["dense"]))
         )
-        self.metrics.dense_seconds += time.perf_counter() - t1
+        d_dense = time.perf_counter() - t1
+        self.metrics.dense_seconds += d_dense
         dt = time.perf_counter() - t0
         self.metrics.batches += 1
         self.metrics.requests += len(reqs)
-        self.metrics.latencies.extend(
-            [time.perf_counter() - r.arrival for r in reqs]
-        )
+        if tracer.enabled:
+            now = tracer.now()
+            # Same deltas the metrics accumulated: dense span ==
+            # serve.dense_seconds contribution, batch span == admit->retire.
+            tracer.complete(
+                "dense", CAT_DENSE, now - d_dense, d_dense, tid=TID_RANKER,
+                args={"bucket": bucket, "batch_size": len(reqs)},
+            )
+            tracer.complete(
+                "batch", CAT_SERVE, now - dt, dt, tid=TID_RANKER,
+                args={"bucket": bucket, "requests": len(reqs),
+                      "n": self.metrics.batches},
+            )
+        for r in reqs:
+            self.metrics.observe_latency(time.perf_counter() - r.arrival)
         if self.controller is not None:
             if pending.unique_ids is not None:
                 # Heat off the hot path: the admit-phase dedup prepass

@@ -1,25 +1,31 @@
-"""CI docs check: docs/ARCHITECTURE.md must mention every src/repro package.
+"""CI docs check: docs/ARCHITECTURE.md must mention every src/repro package,
+and docs/OBSERVABILITY.md must stay in sync with the obs subsystem.
 
 The paper-to-code map is only useful while it is complete; this gate fails
 the build when a new subsystem package lands without an ARCHITECTURE.md
-entry.  Mirrored as a tier-1 test in tests/test_rdma.py so it also fails
-locally.
+entry, when the observability guide goes unlinked, or when a span category
+is added to obs.trace without being documented.  Mirrored as a tier-1 test
+in tests/test_rdma.py so it also fails locally.
 
   python tools/check_docs.py
 """
 from __future__ import annotations
 
 import pathlib
+import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
+# Metric namespaces the registry providers publish (runtime/serving.py);
+# each must be documented in the OBSERVABILITY.md namespace table.
+NAMESPACES = ("serve.", "tier.", "rdma.pool.", "prefetch.")
 
-def main() -> int:
+
+def check_architecture() -> list[str]:
     doc_path = ROOT / "docs" / "ARCHITECTURE.md"
     if not doc_path.exists():
-        print("FAIL: docs/ARCHITECTURE.md is missing")
-        return 1
+        return ["docs/ARCHITECTURE.md is missing"]
     doc = doc_path.read_text()
     pkgs = sorted(
         p.name
@@ -28,10 +34,49 @@ def main() -> int:
     )
     missing = [p for p in pkgs if p not in doc]
     if missing:
-        print(f"FAIL: ARCHITECTURE.md does not mention: {missing}")
-        return 1
+        return [f"ARCHITECTURE.md does not mention: {missing}"]
     print(f"ok: ARCHITECTURE.md covers all {len(pkgs)} src/repro packages")
-    return 0
+    return []
+
+
+def check_observability() -> list[str]:
+    problems: list[str] = []
+    doc_path = ROOT / "docs" / "OBSERVABILITY.md"
+    if not doc_path.exists():
+        return ["docs/OBSERVABILITY.md is missing"]
+    doc = doc_path.read_text()
+    # Every span category defined in obs.trace must be documented (parsed
+    # from source, so a new CAT_* cannot land undocumented).
+    trace_src = (ROOT / "src" / "repro" / "obs" / "trace.py").read_text()
+    cats = re.findall(r'^CAT_\w+ = "(\w+)"', trace_src, re.MULTILINE)
+    missing_cats = [c for c in cats if c not in doc]
+    if missing_cats:
+        problems.append(
+            f"OBSERVABILITY.md misses span categories: {missing_cats}"
+        )
+    missing_ns = [n for n in NAMESPACES if n not in doc]
+    if missing_ns:
+        problems.append(
+            f"OBSERVABILITY.md misses metric namespaces: {missing_ns}"
+        )
+    # The guide must be reachable from the entry points.
+    for linker in ("README.md", "docs/ARCHITECTURE.md"):
+        if "OBSERVABILITY.md" not in (ROOT / linker).read_text():
+            problems.append(f"{linker} does not link docs/OBSERVABILITY.md")
+    if not problems:
+        print(
+            f"ok: OBSERVABILITY.md covers all {len(cats)} span categories, "
+            f"{len(NAMESPACES)} namespaces, linked from README + "
+            "ARCHITECTURE"
+        )
+    return problems
+
+
+def main() -> int:
+    problems = check_architecture() + check_observability()
+    for p in problems:
+        print(f"FAIL: {p}")
+    return 1 if problems else 0
 
 
 if __name__ == "__main__":

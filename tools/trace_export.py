@@ -1,0 +1,153 @@
+"""Load / validate / summarize FlexEMR Chrome-trace files.
+
+The serving runtime's ``--trace`` flag (repro.launch.serve, or any
+``obs.trace.Tracer.save``) writes Chrome trace event format JSON that loads
+in Perfetto as-is.  This tool is the headless companion:
+
+  python tools/trace_export.py trace.json               # validate
+  python tools/trace_export.py trace.json --summarize   # per-stage table
+
+Validation checks the structural invariants the tests pin (no negative
+durations, both timeline processes named, WR events carrying their batch
+correlation key); ``--summarize`` prints a per-stage breakdown — span count,
+total/mean/max duration per span name, split by timeline — the textual form
+of what Perfetto would show.  See docs/OBSERVABILITY.md for the span
+taxonomy.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Timeline pids, mirrored from src/repro/obs/trace.py (this tool must run
+# standalone on a trace file, without PYTHONPATH=src).
+PID_WALL = 1
+PID_VIRTUAL = 2
+TIMELINE = {PID_WALL: "wall", PID_VIRTUAL: "virtual"}
+
+# Events that must carry a "batch" arg (the WR<->batch correlation key).
+BATCH_KEYED = ("wr", "range_read", "lookup_batch", "credit_stall", "steal")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        trace = json.load(f)
+    if "traceEvents" not in trace:
+        raise ValueError(f"{path}: not a Chrome trace (no traceEvents)")
+    return trace
+
+
+def validate(trace: dict) -> list[str]:
+    """Structural invariants; returns a list of problems (empty = ok)."""
+    problems: list[str] = []
+    events = trace["traceEvents"]
+    procs = {
+        e["pid"]
+        for e in events
+        if e.get("ph") == "M" and e.get("name") == "process_name"
+    }
+    for pid, name in TIMELINE.items():
+        if pid not in procs:
+            problems.append(f"missing process_name metadata for {name} "
+                            f"timeline (pid {pid})")
+    for e in events:
+        ph = e.get("ph")
+        if ph == "X":
+            if e.get("dur", 0) < 0:
+                problems.append(f"negative duration: {e['name']} "
+                                f"ts={e['ts']} dur={e['dur']}")
+            if e.get("ts", 0) < 0:
+                problems.append(f"negative timestamp: {e['name']}")
+        if ph in ("X", "i") and e.get("name") in BATCH_KEYED:
+            if "batch" not in e.get("args", {}):
+                problems.append(f"{e['name']} event missing args.batch")
+    # WR spans must nest inside their batch's lookup_batch span.
+    batches = {
+        e["args"]["batch"]: e
+        for e in events
+        if e.get("ph") == "X" and e.get("name") == "lookup_batch"
+        and "batch" in e.get("args", {})
+    }
+    for e in events:
+        if e.get("ph") != "X" or e.get("name") not in ("wr", "range_read"):
+            continue
+        b = batches.get(e.get("args", {}).get("batch"))
+        if b is None:
+            problems.append(f"wr span with no lookup_batch parent "
+                            f"(batch {e.get('args', {}).get('batch')})")
+            continue
+        eps = 1e-3  # µs slack for float round-trip through JSON
+        if e["ts"] < b["ts"] - eps or \
+                e["ts"] + e["dur"] > b["ts"] + b["dur"] + eps:
+            problems.append(
+                f"wr span escapes its batch span (batch "
+                f"{e['args']['batch']}: wr [{e['ts']}, "
+                f"{e['ts'] + e['dur']}] vs batch [{b['ts']}, "
+                f"{b['ts'] + b['dur']}])"
+            )
+    return problems
+
+
+def summarize(trace: dict) -> list[dict]:
+    """Per-stage rows: one per (timeline, span name), durations in ms."""
+    stages: dict[tuple[int, str], dict] = {}
+    for e in trace["traceEvents"]:
+        if e.get("ph") not in ("X", "i"):
+            continue
+        key = (e["pid"], e["name"])
+        s = stages.setdefault(
+            key, {"timeline": TIMELINE.get(e["pid"], str(e["pid"])),
+                  "stage": e["name"], "count": 0, "total_ms": 0.0,
+                  "max_ms": 0.0},
+        )
+        s["count"] += 1
+        d = e.get("dur", 0.0) / 1e3  # µs -> ms
+        s["total_ms"] += d
+        if d > s["max_ms"]:
+            s["max_ms"] = d
+    rows = sorted(
+        stages.values(), key=lambda s: (s["timeline"], -s["total_ms"])
+    )
+    for s in rows:
+        s["mean_ms"] = s["total_ms"] / s["count"]
+    return rows
+
+
+def print_summary(rows: list[dict], file=sys.stdout) -> None:
+    hdr = f"{'timeline':9s} {'stage':16s} {'count':>7s} " \
+          f"{'total_ms':>10s} {'mean_ms':>9s} {'max_ms':>9s}"
+    print(hdr, file=file)
+    print("-" * len(hdr), file=file)
+    for s in rows:
+        print(
+            f"{s['timeline']:9s} {s['stage']:16s} {s['count']:7d} "
+            f"{s['total_ms']:10.3f} {s['mean_ms']:9.4f} {s['max_ms']:9.3f}",
+            file=file,
+        )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome-trace JSON (from --trace / "
+                    "Tracer.save)")
+    ap.add_argument("--summarize", action="store_true",
+                    help="print the per-stage breakdown table")
+    args = ap.parse_args(argv)
+    trace = load(args.trace)
+    problems = validate(trace)
+    n = sum(1 for e in trace["traceEvents"] if e.get("ph") in ("X", "i"))
+    dropped = trace.get("otherData", {}).get("dropped_events", 0)
+    if problems:
+        for p in problems:
+            print(f"FAIL: {p}")
+        return 1
+    print(f"ok: {n} events, {dropped} dropped, invariants hold")
+    if args.summarize:
+        print()
+        print_summary(summarize(trace))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
