@@ -7,10 +7,12 @@ quantity), then the full §Roofline table assembled from the dry-run artifacts.
   PYTHONPATH=src python -m benchmarks.run --smoke    # seconds-scale subset
 
 ``--smoke`` runs the fast regression subset — the hotcache, prefetch, rdma,
-pipeline, dedup, and obs benches in their shrunk configurations — so
-cache-, prefetch-, engine-, pipeline-, wire-dedup-, and observability-path
-regressions show up in the bench trajectory without paying for the full
-figure sweep.
+pipeline, dedup, obs, and loadgen benches in their shrunk configurations —
+so cache-, prefetch-, engine-, pipeline-, wire-dedup-, observability-, and
+latency-under-load regressions show up in the bench trajectory without
+paying for the full figure sweep.  ``--json PATH`` additionally writes each
+bench's scalar metrics for ``tools/bench_history.py`` to gate against the
+committed ``benchmarks/baselines/BENCH_*.json`` snapshots.
 """
 from __future__ import annotations
 
@@ -25,24 +27,43 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast regression subset "
                     "(hotcache/prefetch/rdma/pipeline/dedup)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write per-bench scalar metrics as JSON "
+                    "(input for tools/bench_history.py)")
     opts = ap.parse_args(argv)
     rows = []
+    bench_metrics: dict[str, dict] = {}
 
     def bench(name, fn, derive):
         try:
             out = fn()
             rows.append((name, out.get("us_per_call", 0.0), derive(out)))
+            bench_metrics[name] = {
+                k: v for k, v in out.items()
+                if isinstance(v, (bool, int, float))
+            }
             print(f"{name},{out.get('us_per_call', 0.0):.1f},{derive(out)}")
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             rows.append((name, -1, "FAILED"))
+            bench_metrics[name] = {"FAILED": True}
             print(f"{name},-1,FAILED")
+
+    def write_json():
+        if opts.json is None:
+            return
+        ok = all(r[2] != "FAILED" for r in rows)
+        with open(opts.json, "w") as f:
+            json.dump({"benches": bench_metrics, "ok": ok}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
 
     print("name,us_per_call,derived")
 
     from benchmarks import (
         dedup_bench,
         hotcache_bench,
+        loadgen_bench,
         obs_bench,
         pipeline_bench,
         prefetch_bench,
@@ -88,6 +109,14 @@ def main(argv=None) -> None:
         f"sums={'ok' if o['sum_consistent'] else 'INCONSISTENT'} "
         f"trace={'ok' if o['trace_valid'] else 'INVALID'}"
     )
+    loadgen_derive = lambda o: (  # noqa: E731
+        f"capacity={o['capacity_qps']:.0f}rps "
+        f"p99_knee={o['p99_knee_ms']:.1f}ms "
+        f"p99_over={o['p99_overload_ms']:.1f}ms "
+        f"crowd_alerts={o['crowd_alerts']} "
+        f"coverage_err={o['attr_coverage_err']:.2%} "
+        f"gates={'ok' if o['gates_ok'] else 'FAILED:' + ','.join(o['gates_failed'])}"
+    )
 
     if opts.smoke:
         bench(
@@ -120,6 +149,12 @@ def main(argv=None) -> None:
             lambda: obs_bench.run(smoke=True),
             obs_derive,
         )
+        bench(
+            "loadgen_smoke",
+            lambda: loadgen_bench.run(smoke=True),
+            loadgen_derive,
+        )
+        write_json()
         failed = [r for r in rows if r[2] == "FAILED"]
         if failed:
             sys.exit(1)
@@ -174,6 +209,7 @@ def main(argv=None) -> None:
     bench("pipeline", pipeline_bench.run, pipeline_derive)
     bench("dedup", dedup_bench.run, dedup_derive)
     bench("obs", obs_bench.run, obs_derive)
+    bench("loadgen", lambda: loadgen_bench.run(smoke=False), loadgen_derive)
 
     print()
     try:
@@ -200,6 +236,7 @@ def main(argv=None) -> None:
                     f"gib={r['gib_per_dev']:6.2f}"
                 )
 
+    write_json()
     failed = [r for r in rows if r[2] == "FAILED"]
     if failed:
         sys.exit(1)

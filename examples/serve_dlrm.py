@@ -11,7 +11,12 @@ straggler hedging (cancel-the-loser), and the jit'd dense ranker.
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 \
       --trace trace.json --metrics-out metrics.json  # observability
       # (load trace.json in https://ui.perfetto.dev, or summarize with
-      #  python tools/trace_export.py trace.json --summarize)
+      #  python tools/trace_export.py trace.json --summarize, or render the
+      #  per-request latency breakdown with ... --attribution)
+  PYTHONPATH=src python examples/serve_dlrm.py \
+      --arrival poisson --qps 2000 --duration 5  # open-loop load: seeded
+      # Poisson arrivals at the offered rate (queueing delay measured, not
+      # hidden); prints the slo.* summary (burn rates, goodput) at exit
 """
 import os
 import sys

@@ -57,7 +57,8 @@ class PrefetchIterator:
 class Request:
     rid: int
     payload: dict
-    arrival: float
+    arrival: float  # perf_counter timestamp (intended arrival when open-loop)
+    deadline_s: float | None = None  # latency budget from arrival, if any
 
 
 class BucketBatcher:
@@ -73,9 +74,17 @@ class BucketBatcher:
         self._q: queue.SimpleQueue[Request] = queue.SimpleQueue()
         self._rid = 0
 
-    def submit(self, payload: dict) -> int:
+    def submit(self, payload: dict, arrival: float | None = None,
+               deadline_s: float | None = None) -> int:
+        """Enqueue one request.  ``arrival`` overrides the submit instant
+        with the request's *intended* arrival (open-loop drivers stamp it so
+        a late submission is charged as queue wait, not hidden); clamped to
+        now so clock skew can't make latency negative."""
         self._rid += 1
-        self._q.put(Request(self._rid, payload, time.perf_counter()))
+        t = time.perf_counter()
+        if arrival is not None:
+            t = min(arrival, t)
+        self._q.put(Request(self._rid, payload, t, deadline_s))
         return self._rid
 
     def poll(self) -> tuple[int, list[Request]] | None:

@@ -53,6 +53,7 @@ prefetched row before its first touch are attributed in the stats.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import TYPE_CHECKING
 
 import numpy as np
@@ -250,6 +251,14 @@ class PendingTieredLookup:
         self._remote = remote  # async-handle surface or None (no misses)
         self._do_refresh = do_refresh
         self._out: np.ndarray | None = None
+        # Per-stage attribution (always recorded — the serving loop's
+        # serve.attr.* decomposition reads these; the tracer spans, when on,
+        # are cut from the same work):  probe_s/post_s are the two halves of
+        # lookup_begin; merge_s is wait()'s post-wire work (tier merge +
+        # the pool handle's own merge, when the remote exposes one).
+        self.probe_s = 0.0
+        self.post_s = 0.0
+        self.merge_s = 0.0
         # The §3.1.1 dedup prepass over this batch's VALID ids (sorted
         # unique fused ids + per-touch counts), computed at admit time when
         # ``collect_unique`` is on.  The serving loop feeds these to the
@@ -274,6 +283,7 @@ class PendingTieredLookup:
         tracer = self._tier.tracer
         if self._remote is not None:
             self._sums += np.asarray(self._remote.wait(timeout), np.float64)
+        t_m = time.perf_counter()
         t_merge = tracer.now() if tracer.enabled else 0.0
         out = self._tier._mean_normalize(self._sums, self._mask)
         self._out = out.astype(np.float32)
@@ -285,6 +295,10 @@ class PendingTieredLookup:
             )
         if self._do_refresh:
             self._tier.refresh()
+        self.merge_s = (time.perf_counter() - t_m) + (
+            0.0 if self._remote is None
+            else getattr(self._remote, "merge_s", 0.0)
+        )
         return self._out
 
 
@@ -382,6 +396,7 @@ class TieredLookupService:
         tier-level locking.
         """
         tracer = self.tracer
+        t_begin = time.perf_counter()
         t_probe = tracer.now() if tracer.enabled else 0.0
         mask = np.asarray(mask, bool)
         fused = indices.astype(np.int64) + self._offsets[None, :, None]
@@ -431,6 +446,7 @@ class TieredLookupService:
             out = np.zeros(mask.shape[:2] + (self.cache.rows.shape[1],),
                            np.float64)
 
+        probe_s = time.perf_counter() - t_begin
         if tracer.enabled:
             tracer.complete(
                 "probe", CAT_CACHE, t_probe, tracer.now() - t_probe,
@@ -468,10 +484,16 @@ class TieredLookupService:
                 # EmaFrequencyTracker.update for why dedup must NOT apply
                 # to the heat signal even though it applies to the wire.
                 self.tracker.update(fused[cold])
-        return PendingTieredLookup(
+        pending = PendingTieredLookup(
             self, out, mask, remote, do_refresh,
             unique_ids=uniq, unique_counts=counts,
         )
+        pending.probe_s = probe_s
+        # Everything after the probe — miss posting, byte accounting, LFU
+        # feed — is the post half (a superset of the "post" tracer span,
+        # which covers only the remote posting call).
+        pending.post_s = time.perf_counter() - t_begin - probe_s
+        return pending
 
     def lookup(self, indices: np.ndarray, mask: np.ndarray) -> np.ndarray:
         """[B,F,nnz] -> [B,F,D] pooled; only cache misses hit the network.

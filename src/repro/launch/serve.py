@@ -19,6 +19,18 @@ per-WR schedule on the verbs virtual clock — as Chrome-trace JSON, loadable
 in Perfetto as-is (and summarizable with ``tools/trace_export.py``);
 ``--metrics-out metrics.json`` saves the unified registry snapshot (every
 subsystem's counters under one dotted namespace).
+
+Load injection (``--arrival``): the default ``closed`` mode replays the
+diurnal trace in lockstep — the client waits for the server, so queueing
+delay is invisible.  ``--arrival poisson --qps 2000 --duration 10`` drives
+the server open-loop with seeded Poisson arrivals at the offered rate
+(requests are stamped with their intended arrival time, so queue wait is
+charged to latency even when the server falls behind); ``--arrival trace
+--qps-trace sched.json`` replays a piecewise-linear QPS schedule (JSON list
+of ``[t_seconds, qps]`` breakpoints).  All modes attach an ``SloMonitor``
+(``--slo-target-ms``, optional ``--deadline-ms``) and print its summary —
+good fraction, burn rates, goodput vs raw throughput, alert count — at
+exit under the ``slo.`` registry namespace.
 """
 from __future__ import annotations
 
@@ -35,8 +47,15 @@ from repro.core.adaptive_cache import (
 )
 from repro.core.sharding import TableSpec, make_fused_tables
 from repro.data import synthetic as syn
+from repro.loadgen import (
+    OpenLoopDriver,
+    OpenLoopGenerator,
+    RecsysPayloadFactory,
+    constant,
+)
+from repro.loadgen import trace as qps_schedule_trace
 from repro.models import recsys as R
-from repro.obs import Tracer, get_registry
+from repro.obs import SloMonitor, SloObjective, Tracer, get_registry
 from repro.runtime.serving import FlexEMRServer
 from repro.utils import logger
 
@@ -74,40 +93,80 @@ def run(args) -> dict:
     )
     tracer = Tracer() if getattr(args, "trace", None) else None
     registry = get_registry()
+    slo = SloMonitor(SloObjective(
+        latency_target_s=1e-3 * args.slo_target_ms,
+    ))
     server = FlexEMRServer(
         cfg, params, tables, controller=controller,
         num_engines=args.num_engines, pushdown=not args.no_pushdown,
         engine=args.engine, pipeline_depth=args.pipeline_depth,
         dedup=not args.no_dedup,
-        tracer=tracer, registry=registry,
+        tracer=tracer, registry=registry, slo=slo,
+    )
+    deadline_s = (
+        1e-3 * args.deadline_ms if args.deadline_ms is not None else None
     )
     try:
-        sizes = syn.diurnal_batches(rng, args.requests // 8, base=8, peak=64)
-        submitted = 0
         t0 = time.time()
-        for burst in sizes:
-            if submitted >= args.requests:
-                break
-            for _ in range(int(burst)):
+        if args.arrival == "closed":
+            sizes = syn.diurnal_batches(
+                rng, args.requests // 8, base=8, peak=64
+            )
+            submitted = 0
+            for burst in sizes:
                 if submitted >= args.requests:
                     break
-                b = syn.recsys_batch(rng, cfg.tables, 1, n_dense=cfg.n_dense)
-                server.submit(
-                    {
-                        "indices": b["indices"][0],
-                        "mask": b["mask"][0],
-                        "dense": b["dense"][0],
-                    }
-                )
-                submitted += 1
-            while server.step() is not None:
-                pass
-        while server.metrics.requests < submitted:
-            if server.step() is None:
-                time.sleep(0.001)
+                for _ in range(int(burst)):
+                    if submitted >= args.requests:
+                        break
+                    b = syn.recsys_batch(
+                        rng, cfg.tables, 1, n_dense=cfg.n_dense
+                    )
+                    server.submit(
+                        {
+                            "indices": b["indices"][0],
+                            "mask": b["mask"][0],
+                            "dense": b["dense"][0],
+                        },
+                        deadline_s=deadline_s,
+                    )
+                    submitted += 1
+                while server.step() is not None:
+                    pass
+            while server.metrics.requests < submitted:
+                if server.step() is None:
+                    time.sleep(0.001)
+            driver_stats = None
+        else:
+            if args.arrival == "trace":
+                if not args.qps_trace:
+                    raise SystemExit(
+                        "--arrival trace requires --qps-trace PATH"
+                    )
+                with open(args.qps_trace) as f:
+                    pts = [(float(t), float(q)) for t, q in json.load(f)]
+                schedule = qps_schedule_trace(pts)
+            else:  # poisson
+                schedule = constant(args.qps, args.duration)
+            gen = OpenLoopGenerator(
+                schedule,
+                RecsysPayloadFactory(cfg.tables, cfg.n_dense),
+                seed=args.seed,
+                deadline_s=deadline_s,
+            )
+            events = gen.events()
+            logger.info(
+                "open-loop %s: %d arrivals over %.1fs (peak %.0f qps)",
+                args.arrival, len(events), schedule.duration, schedule.peak,
+            )
+            driver_stats = OpenLoopDriver().run(server, events)
+            submitted = driver_stats["submitted"]
         wall = time.time() - t0
         out = server.metrics.summary()
         out["throughput_rps"] = submitted / wall
+        if driver_stats is not None:
+            out["loadgen"] = driver_stats
+        out["slo"] = slo.summary()
         eng = server.engine_summary()
         if eng is not None:
             out["rdma_engine"] = eng
@@ -152,6 +211,27 @@ def main():
     ap.add_argument("--metrics-out", type=str, default=None, metavar="PATH",
                     help="save the unified metrics-registry snapshot "
                     "(flat dotted-name JSON) here at exit")
+    ap.add_argument("--arrival", choices=("closed", "poisson", "trace"),
+                    default="closed",
+                    help="closed (default): lockstep diurnal replay; "
+                    "poisson: open-loop seeded Poisson arrivals at --qps "
+                    "for --duration; trace: open-loop replay of the "
+                    "--qps-trace schedule")
+    ap.add_argument("--qps", type=float, default=1000.0,
+                    help="offered rate for --arrival poisson (req/s)")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="open-loop run length in seconds "
+                    "(--arrival poisson)")
+    ap.add_argument("--qps-trace", type=str, default=None, metavar="PATH",
+                    help="JSON list of [t_seconds, qps] breakpoints for "
+                    "--arrival trace (piecewise-linear)")
+    ap.add_argument("--slo-target-ms", type=float, default=50.0,
+                    help="latency objective for the SLO monitor; its "
+                    "summary (good fraction, burn rates, goodput, alerts) "
+                    "prints at exit")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="stamp every request with this deadline; goodput "
+                    "then counts deadline-met completions")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     run(args)

@@ -25,6 +25,11 @@ from repro.obs.metrics import (  # noqa: F401
     P2Quantile,
     get_registry,
 )
+from repro.obs.slo import (  # noqa: F401
+    SloMonitor,
+    SloObjective,
+    WindowedHistogram,
+)
 from repro.obs.trace import (  # noqa: F401
     NULL_TRACER,
     CAT_CACHE,
@@ -34,6 +39,7 @@ from repro.obs.trace import (  # noqa: F401
     CAT_LOOKUP,
     CAT_PREFETCH,
     CAT_SERVE,
+    CAT_SLO,
     CAT_STEAL,
     CAT_WIRE,
     PID_VIRTUAL,

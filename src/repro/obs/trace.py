@@ -46,6 +46,7 @@ CAT_CREDIT = "credit"  # credit-window stalls
 CAT_STEAL = "steal"  # work stealing
 CAT_HEDGE = "hedge"  # hedge arm / win / cancel
 CAT_PREFETCH = "prefetch"  # piggybacked speculative fetches
+CAT_SLO = "slo"  # burn-rate alert fire/resolve instants, attribution marks
 
 # The wall-clock serving thread's Perfetto thread row.
 TID_RANKER = 0

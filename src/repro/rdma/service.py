@@ -120,6 +120,10 @@ class LookupHandle:
         self.hedged = 0  # duplicate WRs this handle re-issued
         self._hedge_armed = False  # a wait() retry must not re-duplicate
         self._out: np.ndarray | None = None
+        # Always-recorded merge work (scatter + finalize, excluding the
+        # blocking wait for the engine): the serving loop's serve.attr.*
+        # decomposition splits its lookup stall into wire vs merge with it.
+        self.merge_s = 0.0
         # In-flight coalescing (§3.1.1): rows this lookup borrows from a
         # previous batch's still-pending (or settled) WRs instead of
         # re-posting.  Each record is (donor BatchHandle, donor slot,
@@ -157,6 +161,7 @@ class LookupHandle:
         tracer = self._service.tracer
         t_merge = tracer.now() if tracer.enabled else 0.0
         t0 = time.monotonic()
+        t_work = time.perf_counter()  # re-cut below, after the blocking wait
 
         def remaining():
             return (
@@ -197,6 +202,7 @@ class LookupHandle:
                 # retired lookup, keeping the table bounded by the rows
                 # genuinely in flight.
                 self._service._unregister(self)
+            t_work = time.perf_counter()  # engine done: merge work starts
             for wr, res in zip(bh.wrs, results):  # issue order: f64 merge
                 if wr.dedup:
                     # unique-row protocol: scatter each fetched row into
@@ -224,6 +230,7 @@ class LookupHandle:
         self._out = self._service._finalize(
             out.reshape(B, F, D), self._mask, self._mean_normalize
         )
+        self.merge_s = time.perf_counter() - t_work
         if tracer.enabled:
             tracer.complete(
                 "merge", CAT_LOOKUP, t_merge, tracer.now() - t_merge,

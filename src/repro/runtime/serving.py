@@ -65,6 +65,23 @@ from repro.rdma.service import PooledLookupService
 from repro.utils import logger
 
 
+# Per-request latency decomposition stages (serve.attr.* — see
+# docs/OBSERVABILITY.md).  Batch-level stages; every request in a batch
+# experiences all of them, plus its own queue wait (serve.queue_wait):
+#   admit_other    pad/bookkeeping inside the admit phase not covered below
+#   probe          cache probe + hit pooling (tier lookup_begin, first half)
+#   post           miss posting + byte accounting (lookup_begin, second half)
+#   pipeline_wait  admitted, sitting in the pipeline behind older batches
+#   wire_stall     ranker blocked on the miss handle (wire + engine time)
+#   merge          post-wire merge work (pool scatter + tier f64 merge)
+#   dense          the jit'd ranker stage
+#   retire_other   retire-path bookkeeping outside the dense stage
+ATTR_STAGES = (
+    "admit_other", "probe", "post", "pipeline_wait",
+    "wire_stall", "merge", "dense", "retire_other",
+)
+
+
 @dataclasses.dataclass
 class ServeMetrics:
     batches: int = 0
@@ -86,6 +103,21 @@ class ServeMetrics:
     # a server can run forever without this growing, and small-sample p99
     # interpolates instead of floor-indexing into the sorted list.
     latency_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    # Per-request time spent queued before admit (arrival -> admit start).
+    queue_wait_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    # Admitted-but-unretired batches right now (serve.pipeline.occupancy):
+    # occupancy pinned at pipeline_depth = overload; low occupancy with a
+    # high wire_stall = slow lookups.  The two regimes look identical in
+    # the latency histogram alone.
+    pipeline_occupancy: int = 0
+    # serve.attr.*: per-batch stage histograms + the exact-tiling check
+    # accumulators (attributed seconds vs end-to-end seconds, request-
+    # weighted; loadgen_bench gates |1 - coverage| <= 1%).
+    attr_hists: dict = dataclasses.field(
+        default_factory=lambda: {s: Histogram() for s in ATTR_STAGES}
+    )
+    attr_attributed_s: float = 0.0
+    attr_e2e_s: float = 0.0
 
     @property
     def bytes_saved(self) -> int:
@@ -98,6 +130,25 @@ class ServeMetrics:
 
     def observe_latency(self, seconds: float) -> None:
         self.latency_hist.add(seconds)
+
+    def observe_attribution(self, stages: dict, queue_waits,
+                            e2e_sum_s: float) -> None:
+        """One retired batch's stage decomposition (ATTR_STAGES seconds) +
+        its requests' queue waits; ``e2e_sum_s`` is the batch's summed
+        end-to-end request latency, against which the attributed total is
+        coverage-checked.  The tiling is exact by construction: each
+        request's latency = its queue wait + the batch stages' sum."""
+        for s, v in stages.items():
+            self.attr_hists[s].add(v)
+        batch_s = 0.0
+        for v in stages.values():
+            batch_s += v
+        q_sum = 0.0
+        for w in queue_waits:
+            self.queue_wait_hist.add(w)
+            q_sum += w
+        self.attr_attributed_s += q_sum + batch_s * len(queue_waits)
+        self.attr_e2e_s += e2e_sum_s
 
     def summary(self) -> dict:
         lat = self.latency_hist
@@ -122,6 +173,17 @@ class ServeMetrics:
             "prefetch_evicted": self.prefetch_evicted,
             "prefetch_useful_rate": self.prefetch_hits
             / max(1, self.prefetch_issued),
+            "pipeline": {"occupancy": self.pipeline_occupancy},
+            "queue_wait": self.queue_wait_hist.summary(),
+            "attr": {
+                **{s: h.summary() for s, h in self.attr_hists.items()},
+                "attributed_s": self.attr_attributed_s,
+                "e2e_s": self.attr_e2e_s,
+                # request-weighted fraction of end-to-end latency the stage
+                # decomposition accounts for (1.0 = exact tiling)
+                "coverage": self.attr_attributed_s / self.attr_e2e_s
+                if self.attr_e2e_s else 1.0,
+            },
         }
 
 
@@ -133,6 +195,7 @@ class _InflightBatch(NamedTuple):
     batch: dict
     pending: object  # PendingTieredLookup (miss handle + deferred merge)
     t_admit: float
+    t_admit_end: float  # admit phase done; pipeline_wait starts here
 
 
 class FlexEMRServer:
@@ -174,6 +237,9 @@ class FlexEMRServer:
         registry=None,  # obs.metrics.MetricsRegistry override (default:
         # the process-wide registry); every subsystem summary() registers
         # as a provider under its dotted namespace.
+        slo=None,  # obs.slo.SloMonitor | None: fed one observation per
+        # retired request (latency + deadline verdict when the request
+        # carried one); its summary() registers under the slo.* namespace.
     ):
         if pipeline_depth <= 0:
             raise ValueError("pipeline_depth must be positive")
@@ -257,6 +323,14 @@ class FlexEMRServer:
             self.registry.register_provider(
                 "prefetch", prefetcher.stats.summary
             )
+        self.slo = slo
+        if slo is not None:
+            # A monitor built without a tracer inherits the server's, so
+            # alert fire/resolve instants land on the same timeline as the
+            # serving spans.
+            if not slo.tracer.enabled and self.tracer.enabled:
+                slo.tracer = self.tracer
+            self.registry.register_provider("slo", slo.summary)
 
     # ------------------------------------------------------------ dense part
 
@@ -353,8 +427,14 @@ class FlexEMRServer:
 
     # --------------------------------------------------------------- serving
 
-    def submit(self, payload: dict) -> int:
-        return self.batcher.submit(payload)
+    def submit(self, payload: dict, arrival: float | None = None,
+               deadline_s: float | None = None) -> int:
+        """Enqueue one request.  Open-loop drivers stamp ``arrival`` with
+        the intended arrival time (perf_counter timebase) so submission lag
+        counts as queue wait, and ``deadline_s`` with the latency budget the
+        SLO monitor's goodput accounting checks at retire."""
+        return self.batcher.submit(payload, arrival=arrival,
+                                   deadline_s=deadline_s)
 
     def step(self) -> dict | None:
         """Admit batches until `pipeline_depth` are in flight, then retire
@@ -406,17 +486,22 @@ class FlexEMRServer:
                       "inflight": len(self._pipeline) + 1},
             )
         self._pipeline.append(
-            _InflightBatch(bucket, reqs, batch, pending, t0)
+            _InflightBatch(bucket, reqs, batch, pending, t0,
+                           time.perf_counter())
         )
+        self.metrics.pipeline_occupancy = len(self._pipeline)
         return True
 
     def _retire_oldest(self) -> dict:
         """Wait on the oldest in-flight batch, run its dense stage, account."""
-        bucket, reqs, batch, pending, t0 = self._pipeline.popleft()
+        bucket, reqs, batch, pending, t0, t_admit_end = \
+            self._pipeline.popleft()
+        self.metrics.pipeline_occupancy = len(self._pipeline)
         tracer = self.tracer
         t_wait = time.perf_counter()
         pooled = pending.wait()
-        stall = time.perf_counter() - t_wait
+        t_wait_end = time.perf_counter()
+        stall = t_wait_end - t_wait
         if self.engine == "pooled":
             # Ranker-thread stall on the miss path: with the pipeline full
             # this is what's LEFT of lookup latency after the overlap (the
@@ -439,9 +524,31 @@ class FlexEMRServer:
         )
         d_dense = time.perf_counter() - t1
         self.metrics.dense_seconds += d_dense
-        dt = time.perf_counter() - t0
+        t_retire = time.perf_counter()
+        dt = t_retire - t0
         self.metrics.batches += 1
         self.metrics.requests += len(reqs)
+        # ---- per-request attribution: an exact tiling of [t0, t_retire]
+        # into the ATTR_STAGES, each stage cut from the same timestamps the
+        # tracer spans use.  probe/post/merge are the tier handle's always-
+        # recorded perf_counter deltas, so the decomposition works with
+        # tracing off; request latency = queue wait + the batch stages.
+        merge_s = min(pending.merge_s, stall)
+        attr = {
+            "admit_other": max(
+                0.0, (t_admit_end - t0) - pending.probe_s - pending.post_s
+            ),
+            "probe": pending.probe_s,
+            "post": pending.post_s,
+            "pipeline_wait": t_wait - t_admit_end,
+            "wire_stall": stall - merge_s,
+            "merge": merge_s,
+            "dense": d_dense,
+            "retire_other": max(0.0, (t_retire - t_wait_end) - d_dense),
+        }
+        queue_waits = [t0 - r.arrival for r in reqs]
+        lats = [t_retire - r.arrival for r in reqs]
+        self.metrics.observe_attribution(attr, queue_waits, sum(lats))
         if tracer.enabled:
             now = tracer.now()
             # Same deltas the metrics accumulated: dense span ==
@@ -455,8 +562,22 @@ class FlexEMRServer:
                 args={"bucket": bucket, "requests": len(reqs),
                       "n": self.metrics.batches},
             )
-        for r in reqs:
-            self.metrics.observe_latency(time.perf_counter() - r.arrival)
+            # One instant per batch carrying the stage breakdown — what
+            # tools/trace_export.py --attribution renders into a table.
+            tracer.instant(
+                "attribution", CAT_SERVE, now, tid=TID_RANKER,
+                args={"bucket": bucket, "requests": len(reqs),
+                      "total_s": round(dt, 9),
+                      "queue_wait_mean_s": round(
+                          sum(queue_waits) / len(reqs), 9),
+                      **{k: round(v, 9) for k, v in attr.items()}},
+            )
+        for r, lat in zip(reqs, lats):
+            self.metrics.observe_latency(lat)
+            if self.slo is not None:
+                met = None if r.deadline_s is None \
+                    else bool(lat <= r.deadline_s)
+                self.slo.observe(lat, deadline_met=met)
         if self.controller is not None:
             if pending.unique_ids is not None:
                 # Heat off the hot path: the admit-phase dedup prepass

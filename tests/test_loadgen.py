@@ -1,0 +1,320 @@
+"""Open-loop load harness (schedules, Poisson arrivals, drivers).
+
+The load-bearing contracts:
+  * schedules are pure data — piecewise-linear interpolation, exact
+    trapezoid integrals, validation of malformed breakpoints;
+  * arrival generation is **deterministic**: identical (schedule, seed)
+    produce bit-identical arrival sequences, run after run, independent of
+    any consumer (the open-loop definition: the server cannot leak back
+    into the arrival process) — and the thinned rate matches the schedule;
+  * the virtual-clock replay is pure float64 arithmetic: bit-identical
+    latencies and SLO verdicts across runs and across ``pipeline_depth``
+    {1, 2, 4}, with the latency-vs-load knee where queueing theory puts it;
+  * the flash-crowd marker concentrates exactly the configured field's
+    draws on the hot id set, only inside the spike window;
+  * driving a real ``FlexEMRServer`` with arrival-stamped requests keeps
+    scores bit-equal across pipeline depths and yields exact (coverage
+    == 1) per-request attribution.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data.pipeline import BucketBatcher
+from repro.loadgen import (
+    OpenLoopGenerator,
+    QpsSchedule,
+    RecsysPayloadFactory,
+    constant,
+    diurnal,
+    flash_crowd,
+    poisson_arrivals,
+    replay_open_loop,
+    trace,
+)
+from repro.models import recsys as R
+from repro.obs import MetricsRegistry, SloMonitor, SloObjective
+from repro.runtime.serving import FlexEMRServer
+
+# ---------------------------------------------------------------- schedules
+
+
+def test_schedule_interpolation_and_bounds():
+    s = trace([(0.0, 100.0), (1.0, 300.0), (3.0, 300.0)])
+    assert s.qps_at(0.0) == 100.0
+    assert s.qps_at(0.5) == pytest.approx(200.0)
+    assert s.qps_at(2.0) == 300.0
+    assert s.qps_at(-0.1) == 0.0 and s.qps_at(3.1) == 0.0
+    assert s.peak == 300.0
+    assert s.duration == 3.0
+    # trapezoid: 0.5*(100+300)*1 + 300*2
+    assert s.expected_arrivals() == pytest.approx(800.0)
+    assert s.scaled(2.0).expected_arrivals() == pytest.approx(1600.0)
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        QpsSchedule([(0.0, 1.0)])  # one breakpoint
+    with pytest.raises(ValueError):
+        QpsSchedule([(1.0, 1.0), (0.0, 1.0)])  # unsorted
+    with pytest.raises(ValueError):
+        QpsSchedule([(0.0, -1.0), (1.0, 1.0)])  # negative rate
+    with pytest.raises(ValueError):
+        diurnal(100.0, 50.0, 1.0)  # peak below base
+    with pytest.raises(ValueError):
+        flash_crowd(10.0, 100.0, 1.0, spike_t0=0.8, spike_t1=1.5)
+
+
+def test_diurnal_shape():
+    s = diurnal(100.0, 500.0, duration=2.0, steps=64)
+    rates = [s.qps_at(t) for t in np.linspace(0.0, 2.0, 200)]
+    assert min(rates) >= 100.0 - 1e-9
+    assert max(rates) <= 500.0 + 1e-9
+    assert max(rates) > 450.0  # actually reaches the peak
+    assert s.qps_at(0.0) == pytest.approx(100.0, rel=1e-6)
+
+
+# ----------------------------------------------------- arrival determinism
+
+
+def test_poisson_arrivals_bit_identical_across_runs():
+    s = constant(2000.0, 1.5)
+    a = poisson_arrivals(s, seed=42)
+    b = poisson_arrivals(s, seed=42)
+    assert a.dtype == np.float64
+    assert np.array_equal(a, b)  # bit-identical, not approx
+    c = poisson_arrivals(s, seed=43)
+    assert not np.array_equal(a, c)
+    assert np.all(np.diff(a) >= 0.0)  # sorted
+    assert a[0] >= 0.0 and a[-1] <= 1.5
+
+
+def test_poisson_rate_matches_schedule():
+    s = diurnal(500.0, 4000.0, duration=2.0)
+    counts = [len(poisson_arrivals(s, seed=i)) for i in range(5)]
+    mu = s.expected_arrivals()
+    # each count is ~Poisson(mu) thinned: 5 seeds all within 5 sigma
+    for n in counts:
+        assert abs(n - mu) < 5.0 * np.sqrt(mu)
+
+
+def test_poisson_max_events_truncates():
+    s = constant(5000.0, 1.0)
+    a = poisson_arrivals(s, seed=0, max_events=100)
+    full = poisson_arrivals(s, seed=0)
+    assert len(a) == 100
+    assert np.array_equal(a, full[:100])
+
+
+def test_generator_events_bit_identical():
+    cfg = _tiny_cfg()
+    s = constant(3000.0, 0.2)
+    mk = lambda: OpenLoopGenerator(  # noqa: E731
+        s, RecsysPayloadFactory(cfg.tables, cfg.n_dense), seed=9,
+        deadline_s=0.05, max_events=64,
+    ).events()
+    ev_a, ev_b = mk(), mk()
+    assert len(ev_a) == len(ev_b) > 0
+    for a, b in zip(ev_a, ev_b):
+        assert a.t == b.t  # exact float equality
+        assert a.deadline_s == 0.05
+        for k in ("indices", "mask", "dense"):
+            assert np.array_equal(a.payload[k], b.payload[k])
+
+
+def test_flash_crowd_redirects_only_hot_field_in_window():
+    cfg = _tiny_cfg()
+    sched, crowd = flash_crowd(
+        base_qps=500.0, spike_qps=5000.0, duration=1.0,
+        spike_t0=0.4, spike_t1=0.7, field=1, hot_ids=(1, 2, 3),
+        hot_frac=1.0,
+    )
+    assert sched.qps_at(0.55) == pytest.approx(5000.0)
+    assert sched.qps_at(0.2) == pytest.approx(500.0)
+    assert crowd.active(0.5) and not crowd.active(0.3) \
+        and not crowd.active(0.7)
+    factory = RecsysPayloadFactory(cfg.tables, cfg.n_dense, crowd=crowd)
+    rng = np.random.default_rng(0)
+    inside = factory(rng, 0.5)
+    outside = factory(rng, 0.1)
+    assert set(np.asarray(inside["indices"][1]).tolist()) <= {1, 2, 3}
+    # other fields keep the zipf draw (hot set is 3 ids out of 4000)
+    assert not set(np.asarray(outside["indices"][1]).tolist()) <= {1, 2, 3}
+
+
+# ------------------------------------------------- virtual-clock replay
+
+
+def _slo(latency_target_s=0.05):
+    return SloMonitor(
+        SloObjective(latency_target_s=latency_target_s, target=0.99,
+                     fast_window_s=0.25, slow_window_s=1.0,
+                     burn_threshold=10.0, min_samples=20),
+        clock_epoch=0.0,
+    )
+
+
+def test_replay_bit_identical_across_runs_and_depths():
+    """The determinism satellite: same seed + schedule -> bit-identical
+    arrivals, latencies, and SLO verdicts across runs, for each pipeline
+    depth in {1, 2, 4}."""
+    s = constant(3000.0, 1.0)
+    times = poisson_arrivals(s, seed=3)
+    for depth in (1, 2, 4):
+        runs = []
+        for _ in range(2):
+            slo = _slo()
+            r = replay_open_loop(
+                times, batch_size=32, lookup_s=0.004, dense_s=0.002,
+                pipeline_depth=depth, slo=slo, deadline_s=0.05,
+            )
+            runs.append((r, slo.summary(now=r["retire_times"][-1])))
+        (ra, sa), (rb, sb) = runs
+        assert np.array_equal(ra["latencies"], rb["latencies"])
+        assert np.array_equal(ra["retire_times"], rb["retire_times"])
+        assert sa == sb  # SLO verdicts bit-identical (dict of floats)
+
+
+def test_replay_knee_and_depth_overlap():
+    s_low = constant(2000.0, 1.0)
+    s_over = constant(40000.0, 1.0)
+    low = replay_open_loop(poisson_arrivals(s_low, 0), 32, 0.002, 0.0005)
+    over = replay_open_loop(poisson_arrivals(s_over, 0), 32, 0.002, 0.0005)
+    # below capacity (even in the timeout-closed partial-batch regime,
+    # ~4000 rps here) the tail is near batching + service time; past the
+    # full-batch capacity (~25k rps) queueing dominates
+    assert low["p99_s"] < 0.05
+    assert over["p99_s"] > 10.0 * low["p99_s"]
+    # pipelining overlaps lookup under dense: depth 2 strictly faster than
+    # the closed loop on the same overloaded arrivals
+    d1 = replay_open_loop(poisson_arrivals(s_over, 0), 32, 0.002, 0.0005,
+                          pipeline_depth=1)
+    assert over["makespan_s"] < d1["makespan_s"]
+
+
+def test_replay_slo_alert_fires_only_under_overload():
+    slo_lo = _slo()
+    replay_open_loop(poisson_arrivals(constant(2000.0, 1.0), 1), 32,
+                     0.002, 0.0005, slo=slo_lo)
+    assert slo_lo.alerts_fired == 0
+    slo_hi = _slo()
+    replay_open_loop(poisson_arrivals(constant(40000.0, 1.0), 1), 32,
+                     0.002, 0.0005, slo=slo_hi)
+    assert slo_hi.alerts_fired >= 1
+    assert slo_hi.breaches > 0
+
+
+# ------------------------------------------------- real-server open loop
+
+
+def _tiny_cfg():
+    tables = (
+        TableSpec("big", 4000, nnz=4),
+        TableSpec("mid", 1000, nnz=2),
+        TableSpec("small", 64, nnz=1),
+    )
+    return R.RecsysConfig(
+        name="t", arch="dlrm", tables=tables, embed_dim=16, n_dense=13,
+        bottom_mlp=(64, 16), mlp=(64, 32),
+    )
+
+
+@pytest.fixture(scope="module")
+def loadgen_fixture():
+    cfg = _tiny_cfg()
+    params = R.init_params(cfg, jax.random.key(0))
+    tables = make_fused_tables(cfg.tables, cfg.embed_dim, 4)
+    events = OpenLoopGenerator(
+        constant(4000.0, 0.2),
+        RecsysPayloadFactory(cfg.tables, cfg.n_dense),
+        seed=21, max_events=24,
+    ).events()
+    return cfg, params, tables, events
+
+
+def _serve_events(cfg, params, tables, events, depth, slo=None,
+                  registry=None):
+    """Submit every event up front with its arrival stamp, then drain —
+    deterministic batching, so scores are comparable across depths."""
+    import time
+
+    server = FlexEMRServer(
+        cfg, params, tables, pipeline_depth=depth,
+        batcher=BucketBatcher(buckets=(8,), max_wait=0.001),
+        registry=registry, slo=slo,
+    )
+    try:
+        epoch = time.perf_counter()
+        for ev in events:
+            server.submit(ev.payload, arrival=epoch + ev.t,
+                          deadline_s=ev.deadline_s)
+        outs = []
+        while True:
+            o = server.step()
+            if o is None and server.metrics.requests >= len(events):
+                break
+            if o is not None:
+                outs.append(o["scores"])
+        metrics = server.metrics
+    finally:
+        server.close()
+    return outs, metrics
+
+
+def test_server_scores_bit_equal_across_depths(loadgen_fixture):
+    cfg, params, tables, events = loadgen_fixture
+    outs = {}
+    for depth in (1, 2, 4):
+        o, m = _serve_events(cfg, params, tables, events, depth)
+        outs[depth] = o
+        assert m.requests == len(events)
+    for depth in (2, 4):
+        assert len(outs[1]) == len(outs[depth])
+        assert all(
+            np.array_equal(a, b) for a, b in zip(outs[1], outs[depth])
+        )
+
+
+def test_server_attribution_and_slo_with_arrival_stamps(loadgen_fixture):
+    cfg, params, tables, events = loadgen_fixture
+    registry = MetricsRegistry()
+    slo = SloMonitor(SloObjective(latency_target_s=30.0))
+    _, m = _serve_events(cfg, params, tables, events, depth=2, slo=slo,
+                         registry=registry)
+    snap = registry.snapshot()
+    # exact tiling: attributed time covers end-to-end latency exactly
+    assert snap["serve.attr.coverage"] == pytest.approx(1.0, abs=1e-9)
+    assert snap["serve.queue_wait.count"] == len(events)
+    assert snap["serve.pipeline.occupancy"] == 0  # drained
+    # arrival stamps flow into the SLO monitor on the server's retire path
+    assert slo.requests == len(events)
+    assert snap["slo.requests"] == len(events)
+    assert snap["slo.good_fraction"] == 1.0  # 30 s target: all good
+    # stamped deadlines drive goodput accounting
+    assert slo.deadline_total == 0  # fixture events carry no deadline
+    # queue wait includes the intended-arrival backlog (all submitted at
+    # once, so later requests waited measurably)
+    assert snap["serve.queue_wait.max"] > 0.0
+
+
+def test_arrival_clamp_rejects_future_stamps(loadgen_fixture):
+    """An arrival stamp in the future must clamp to now: queue wait and
+    latency can never go negative."""
+    cfg, params, tables, events = loadgen_fixture
+    import time
+
+    server = FlexEMRServer(
+        cfg, params, tables, pipeline_depth=2,
+        batcher=BucketBatcher(buckets=(8,), max_wait=0.001),
+    )
+    try:
+        for ev in events:
+            server.submit(ev.payload,
+                          arrival=time.perf_counter() + 1000.0)
+        while server.metrics.requests < len(events):
+            server.step()
+        assert server.metrics.queue_wait_hist.min >= 0.0
+        assert server.metrics.latency_hist.min >= 0.0
+    finally:
+        server.close()

@@ -1,0 +1,256 @@
+"""SLO monitor: windows, burn rates, multi-window alerting, goodput.
+
+The load-bearing contracts:
+  * burn rate is ``bad_fraction / (1 - target)`` over each sliding count
+    window, with lazy bucket-ring eviction that actually forgets;
+  * the alert fires only when BOTH windows exceed the threshold with
+    ``min_samples`` of evidence each, and resolves on fast-window
+    recovery — the SRE-workbook shape, on an explicit clock so the same
+    monitor is bit-deterministic on the replay's virtual time;
+  * fire/resolve transitions emit ``CAT_SLO`` tracer instants;
+  * goodput (deadline-met rate) and raw throughput diverge under overload;
+  * ``summary()`` is a registry provider: ``slo.*`` keys flatten next to
+    ``serve.*``, and ``serve.attr.*`` tiles end-to-end latency exactly
+    (trace-side table from ``tools/trace_export.py --attribution`` agrees).
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.obs import MetricsRegistry, SloMonitor, SloObjective, Tracer
+from repro.obs.slo import WindowedHistogram, _CountWindow
+from repro.obs.trace import CAT_SLO
+
+
+def _trace_export():
+    path = (
+        pathlib.Path(__file__).resolve().parents[1] / "tools"
+        / "trace_export.py"
+    )
+    spec = importlib.util.spec_from_file_location("trace_export", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _objective(**kw):
+    base = dict(latency_target_s=0.1, target=0.9, fast_window_s=1.0,
+                slow_window_s=4.0, burn_threshold=3.0, min_samples=10)
+    base.update(kw)
+    return SloObjective(**base)
+
+
+# ------------------------------------------------------------ count window
+
+
+def test_count_window_slides_and_evicts():
+    w = _CountWindow(1.0, n_buckets=4)
+    for t in (0.05, 0.3, 0.55, 0.8):
+        w.add(t, good=True)
+    w.add(0.8, good=False)
+    assert w.totals(0.9) == (4, 1)
+    # 2.5 s later everything has aged out
+    assert w.totals(3.4) == (0, 0)
+    # a new lap reuses the stale slots
+    w.add(3.5, good=False)
+    assert w.totals(3.6) == (0, 1)
+
+
+def test_count_window_validation():
+    with pytest.raises(ValueError):
+        _CountWindow(0.0)
+
+
+# ------------------------------------------------------ windowed histogram
+
+
+def test_windowed_histogram_exact_within_window():
+    h = WindowedHistogram(1.0, n_buckets=4, bucket_warmup=64)
+    xs = [0.01 * i for i in range(40)]
+    for i, x in enumerate(xs):
+        h.add(x, now=0.9 * i / len(xs))
+    assert h.count(0.9) == 40
+    # all buckets still in exact warmup: true interpolated quantile
+    assert h.quantile(0.5, 0.9) == pytest.approx(
+        float(np.quantile(xs, 0.5)))
+
+
+def test_windowed_histogram_forgets_old_buckets():
+    h = WindowedHistogram(1.0, n_buckets=4)
+    for _ in range(20):
+        h.add(5.0, now=0.1)
+    h.add(0.5, now=2.0)
+    # at t=2.0 the burst at t=0.1 is outside the window
+    assert h.count(2.0) == 1
+    assert h.quantile(0.99, 2.0) == pytest.approx(0.5)
+    assert h.quantile(0.5, 10.0) == 0.0  # empty window
+
+
+# ------------------------------------------------------------- burn rates
+
+
+def test_burn_rate_math():
+    m = SloMonitor(_objective(), clock_epoch=0.0)
+    # 10 good + 10 bad at t~10: bad fraction 0.5, budget 0.1 -> burn 5
+    for i in range(10):
+        m.observe(0.01, now=10.0 + 1e-3 * i)
+        m.observe(0.5, now=10.0 + 1e-3 * i)
+    bf, bs = m.burn_rates(10.05)
+    assert bf == pytest.approx(5.0)
+    assert bs == pytest.approx(5.0)
+    assert m.requests == 20 and m.good == 10 and m.breaches == 10
+
+
+def test_alert_fires_and_resolves_with_instants():
+    tracer = Tracer()
+    m = SloMonitor(_objective(), tracer=tracer, clock_epoch=0.0)
+    # sustained badness: burn 10 > threshold 3 in both windows
+    for i in range(20):
+        m.observe(1.0, now=10.0 + 0.01 * i)
+    assert m.alerting and m.alerts_fired == 1
+    # more badness does not re-fire
+    for i in range(10):
+        m.observe(1.0, now=10.3 + 0.01 * i)
+    assert m.alerts_fired == 1
+    # recovery: fast window (1 s) fills with good samples at t~12,
+    # the t~10 badness ages out of it
+    for i in range(30):
+        m.observe(0.01, now=12.0 + 0.01 * i)
+    assert not m.alerting and m.alerts_resolved == 1
+    fires = tracer.events(name="slo_alert_fire")
+    resolves = tracer.events(name="slo_alert_resolve")
+    assert len(fires) == 1 and len(resolves) == 1
+    assert fires[0]["cat"] == CAT_SLO
+    assert fires[0]["args"]["burn_fast"] >= 3.0
+
+
+def test_alert_needs_min_samples_in_both_windows():
+    m = SloMonitor(_objective(min_samples=50), clock_epoch=0.0)
+    for i in range(30):  # all bad, but below min_samples
+        m.observe(1.0, now=5.0 + 0.01 * i)
+    assert not m.alerting and m.alerts_fired == 0
+
+
+def test_alert_needs_both_windows_hot():
+    """A brief spike trips the fast window only: the slow window dilutes
+    it below threshold, so no page (the multi-window point)."""
+    m = SloMonitor(_objective(), clock_epoch=0.0)
+    # 3.5 s of good traffic fills the slow window...
+    for i in range(350):
+        m.observe(0.01, now=10.0 + 0.01 * i)
+    # ...then a 0.35 s burst of badness: the fast window (trailing 1 s,
+    # ~65 good + 35 bad) burns at ~3.5x, but the slow window dilutes the
+    # same 35 bad over ~385 samples -> burn ~0.9 < 3
+    for i in range(35):
+        m.observe(1.0, now=13.5 + 0.01 * i)
+    bf, bs = m.burn_rates(13.85)
+    assert bf >= 3.0
+    assert bs < 3.0
+    assert not m.alerting
+
+
+def test_virtual_clock_determinism():
+    """Same (latency, now) stream -> bit-identical summaries: the replay
+    determinism contract at the monitor level."""
+    rng = np.random.default_rng(0)
+    lats = rng.exponential(0.1, 500)
+    nows = np.sort(rng.uniform(0.0, 10.0, 500))
+    mk = lambda: SloMonitor(_objective(), clock_epoch=0.0)  # noqa: E731
+    a, b = mk(), mk()
+    for m in (a, b):
+        for lat, now in zip(lats, nows):
+            m.observe(float(lat), now=float(now))
+    assert a.summary(now=10.0) == b.summary(now=10.0)
+
+
+# --------------------------------------------------- goodput vs throughput
+
+
+def test_goodput_vs_throughput_under_deadlines():
+    m = SloMonitor(_objective(latency_target_s=10.0), clock_epoch=0.0)
+    # 100 requests over 10 s; 40 miss their deadline
+    for i in range(100):
+        m.observe(0.01, now=0.1 * i, deadline_met=(i % 5 != 0) or i >= 50)
+    s = m.summary(now=10.0)
+    assert s["deadline_total"] == 100
+    assert s["deadline_met"] == 90
+    assert s["throughput_rps"] == pytest.approx(100 / 9.9)
+    assert s["goodput_rps"] == pytest.approx(90 / 9.9)
+    assert s["goodput_rps"] < s["throughput_rps"]
+
+
+def test_goodput_falls_back_to_slo_good_without_deadlines():
+    m = SloMonitor(_objective(latency_target_s=0.1), clock_epoch=0.0)
+    for i in range(10):
+        m.observe(0.01 if i < 8 else 1.0, now=0.5 * i)
+    s = m.summary(now=5.0)
+    assert s["deadline_total"] == 0
+    assert s["good"] == 8
+    assert s["goodput_rps"] == pytest.approx(8 / 4.5)
+
+
+def test_objective_validation():
+    with pytest.raises(ValueError):
+        SloObjective(latency_target_s=0.1, target=1.0)
+    with pytest.raises(ValueError):
+        SloObjective(latency_target_s=0.1, fast_window_s=2.0,
+                     slow_window_s=1.0)
+
+
+# -------------------------------------------------- registry + trace side
+
+
+def test_summary_flattens_under_slo_namespace():
+    m = SloMonitor(_objective(), clock_epoch=0.0)
+    for i in range(25):
+        m.observe(0.01, now=1.0 + 0.01 * i)
+    reg = MetricsRegistry()
+    reg.register_provider("slo", m.summary)
+    snap = reg.snapshot()
+    for key in ("slo.requests", "slo.good_fraction", "slo.burn_fast",
+                "slo.burn_slow", "slo.alerting", "slo.alerts_fired",
+                "slo.throughput_rps", "slo.goodput_rps",
+                "slo.objective.latency_target_s", "slo.window.p99_s"):
+        assert key in snap, key
+    assert snap["slo.requests"] == 25
+    assert not any(k.endswith(".error") for k in snap)
+
+
+def test_trace_export_attribution_report(tmp_path):
+    """The --attribution table over synthetic instants: request-weighted
+    sums, exact coverage, and the CLI path."""
+    te = _trace_export()
+    tracer = Tracer()
+    # two batches with known stage tilings (all stages sum to total_s)
+    for n, total in ((4, 0.010), (2, 0.020)):
+        stages = {s: 0.0 for s in te.ATTR_STAGES[1:]}
+        stages["wire_stall"] = total / 2
+        stages["dense"] = total / 2
+        tracer.instant(
+            "attribution", "serve", tracer.now(),
+            args={"requests": n, "total_s": total,
+                  "queue_wait_mean_s": 0.001, **stages},
+        )
+    path = tmp_path / "attr.trace.json"
+    tracer.save(str(path))
+    rep = te.attribution(te.load(str(path)))
+    assert rep["batches"] == 2 and rep["requests"] == 6
+    assert rep["stages"]["queue_wait"] == pytest.approx(0.006)
+    assert rep["stages"]["dense"] == pytest.approx(4 * 0.005 + 2 * 0.010)
+    assert rep["total_s"] == pytest.approx(4 * 0.011 + 2 * 0.021)
+    assert rep["coverage"] == pytest.approx(1.0)
+    # the CLI renders it without error
+    assert te.main([str(path), "--attribution"]) == 0
+
+
+def test_trace_export_attribution_empty_trace(tmp_path):
+    te = _trace_export()
+    tracer = Tracer()
+    tracer.instant("something_else", "serve", tracer.now(), args={})
+    path = tmp_path / "empty.trace.json"
+    tracer.save(str(path))
+    rep = te.attribution(te.load(str(path)))
+    assert rep["batches"] == 0
+    assert rep["coverage"] == 1.0  # vacuous, not NaN

@@ -1,0 +1,188 @@
+"""Bench regression gate: snapshot smoke-bench headline numbers, fail CI on
+regression beyond tolerance.
+
+The perf trajectory was previously invisible: `benchmarks/run.py --smoke`
+printed its numbers and CI only checked that nothing crashed, so a silent
+2x regression in, say, the dedup byte reduction would merge clean.  This
+tool closes the loop:
+
+  PYTHONPATH=src python -m benchmarks.run --smoke --json results.json
+  python tools/bench_history.py check results.json      # gate (CI)
+  python tools/bench_history.py update results.json     # refresh baselines
+
+Baselines live in ``benchmarks/baselines/BENCH_<name>.json`` (committed;
+one file per bench so diffs review cleanly).  ``check`` compares each
+gated metric against its baseline under a per-metric rule:
+
+  * ``higher_rel``  — bigger is better; fail if current < baseline*(1-tol)
+  * ``lower_abs``   — smaller is better; fail if current > baseline + tol
+                      (absolute slack: the right shape for near-zero
+                      quantities like overhead fractions)
+  * ``equal``       — invariant booleans (bit-equality, gate verdicts);
+                      fail on any change away from the baseline truth
+
+Metrics without a rule are recorded in the baseline but never gated —
+wall-clock-noisy numbers stay visible in diffs without flaking CI.
+Improvements never fail; run ``update`` to ratchet the baseline forward.
+
+Standalone like the other tools/ scripts: no PYTHONPATH needed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_BASELINES = (
+    pathlib.Path(__file__).resolve().parents[1] / "benchmarks" / "baselines"
+)
+
+# (bench name as printed by benchmarks/run.py) -> {metric: (rule, tol)}.
+# Tolerances are deliberately loose for wall-clock-derived ratios (CI
+# containers are noisy); invariants and deterministic counts are tight.
+RULES: dict[str, dict[str, tuple[str, float]]] = {
+    "hotcache_smoke": {
+        "bytes_reduction": ("higher_rel", 0.25),
+        "hit_rate": ("higher_rel", 0.15),
+    },
+    "prefetch_smoke": {
+        "hit_rate_prefetch": ("higher_rel", 0.15),
+        "miss_bytes_reduction": ("higher_rel", 0.25),
+        "bit_equal": ("equal", 0.0),
+        "kernel_matches_ref": ("equal", 0.0),
+    },
+    "rdma_smoke": {
+        "p99_speedup": ("higher_rel", 0.4),
+        "bit_equal": ("equal", 0.0),
+    },
+    "pipeline_smoke": {
+        "pipeline_speedup": ("higher_rel", 0.3),
+        "bit_equal": ("equal", 0.0),
+    },
+    "dedup_smoke": {
+        "byte_reduction_high_skew": ("higher_rel", 0.15),
+        "bit_equal": ("equal", 0.0),
+    },
+    "obs_smoke": {
+        "overhead_frac": ("lower_abs", 0.05),
+        "bit_equal": ("equal", 0.0),
+        "sum_consistent": ("equal", 0.0),
+        "trace_valid": ("equal", 0.0),
+    },
+    "loadgen_smoke": {
+        "gates_ok": ("equal", 0.0),
+        "attr_coverage_err": ("lower_abs", 0.01),
+        # capacity is a wall-clock rate: gate only catastrophic collapse
+        "capacity_qps": ("higher_rel", 0.5),
+    },
+}
+
+
+def _baseline_path(base_dir: pathlib.Path, name: str) -> pathlib.Path:
+    return base_dir / f"BENCH_{name}.json"
+
+
+def _scalars(metrics: dict) -> dict:
+    return {
+        k: v for k, v in metrics.items()
+        if isinstance(v, (bool, int, float))
+    }
+
+
+def check(results: dict, base_dir: pathlib.Path) -> list[str]:
+    """Compare results against committed baselines; returns failures."""
+    problems: list[str] = []
+    benches = results.get("benches", {})
+    for name, rules in RULES.items():
+        path = _baseline_path(base_dir, name)
+        if not path.exists():
+            problems.append(f"{name}: no baseline ({path}); run "
+                            f"'bench_history.py update' and commit it")
+            continue
+        base = json.loads(path.read_text())["metrics"]
+        cur = benches.get(name)
+        if cur is None:
+            problems.append(f"{name}: bench missing from results")
+            continue
+        if cur.get("FAILED"):
+            problems.append(f"{name}: bench FAILED")
+            continue
+        for metric, (rule, tol) in rules.items():
+            if metric not in base:
+                continue  # baseline predates the metric: nothing to gate
+            if metric not in cur:
+                problems.append(f"{name}.{metric}: missing from results "
+                                f"(baseline has it)")
+                continue
+            b, c = base[metric], cur[metric]
+            if rule == "equal":
+                if bool(c) != bool(b):
+                    problems.append(
+                        f"{name}.{metric}: {b} -> {c} (invariant changed)"
+                    )
+            elif rule == "higher_rel":
+                floor = b * (1.0 - tol)
+                if c < floor:
+                    problems.append(
+                        f"{name}.{metric}: {c:.4g} < {floor:.4g} "
+                        f"(baseline {b:.4g}, tol -{tol:.0%})"
+                    )
+            elif rule == "lower_abs":
+                # Clamp noisy-negative baselines (e.g. an overhead fraction
+                # that measured below zero) so the ceiling never drops under
+                # the plain tolerance — a healthy near-zero run must pass.
+                ceil = max(b, 0.0) + tol
+                if c > ceil:
+                    problems.append(
+                        f"{name}.{metric}: {c:.4g} > {ceil:.4g} "
+                        f"(baseline {b:.4g}, slack +{tol:.4g})"
+                    )
+            else:  # pragma: no cover - RULES is the only writer
+                raise ValueError(f"unknown rule {rule!r}")
+    return problems
+
+
+def update(results: dict, base_dir: pathlib.Path) -> list[str]:
+    """(Re)write one baseline file per bench from a results JSON."""
+    base_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, metrics in results.get("benches", {}).items():
+        if metrics.get("FAILED"):
+            continue
+        path = _baseline_path(base_dir, name)
+        path.write_text(json.dumps(
+            {"name": name, "metrics": _scalars(metrics)},
+            indent=1, sort_keys=True,
+        ) + "\n")
+        written.append(str(path))
+    return written
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("mode", choices=("check", "update"))
+    ap.add_argument("results", help="JSON from benchmarks/run.py --json")
+    ap.add_argument("--baselines", default=str(DEFAULT_BASELINES),
+                    help="baseline directory (default: "
+                    "benchmarks/baselines)")
+    args = ap.parse_args(argv)
+    with open(args.results) as f:
+        results = json.load(f)
+    base_dir = pathlib.Path(args.baselines)
+    if args.mode == "update":
+        for path in update(results, base_dir):
+            print(f"wrote {path}")
+        return 0
+    problems = check(results, base_dir)
+    if problems:
+        for p in problems:
+            print(f"REGRESSION: {p}")
+        return 1
+    n = sum(len(r) for r in RULES.values())
+    print(f"ok: {n} gated metrics within tolerance of committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

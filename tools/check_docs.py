@@ -17,9 +17,11 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
-# Metric namespaces the registry providers publish (runtime/serving.py);
-# each must be documented in the OBSERVABILITY.md namespace table.
-NAMESPACES = ("serve.", "tier.", "rdma.pool.", "prefetch.")
+# Metric namespaces the registry providers publish (runtime/serving.py,
+# obs/slo.py); each must be documented in the OBSERVABILITY.md namespace
+# table.
+NAMESPACES = ("serve.", "tier.", "rdma.pool.", "prefetch.", "serve.attr.",
+              "slo.")
 
 
 def check_architecture() -> list[str]:

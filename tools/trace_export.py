@@ -4,15 +4,20 @@ The serving runtime's ``--trace`` flag (repro.launch.serve, or any
 ``obs.trace.Tracer.save``) writes Chrome trace event format JSON that loads
 in Perfetto as-is.  This tool is the headless companion:
 
-  python tools/trace_export.py trace.json               # validate
-  python tools/trace_export.py trace.json --summarize   # per-stage table
+  python tools/trace_export.py trace.json                # validate
+  python tools/trace_export.py trace.json --summarize    # per-stage table
+  python tools/trace_export.py trace.json --attribution  # latency breakdown
 
 Validation checks the structural invariants the tests pin (no negative
 durations, both timeline processes named, WR events carrying their batch
 correlation key); ``--summarize`` prints a per-stage breakdown — span count,
 total/mean/max duration per span name, split by timeline — the textual form
-of what Perfetto would show.  See docs/OBSERVABILITY.md for the span
-taxonomy.
+of what Perfetto would show.  ``--attribution`` renders the per-request
+latency decomposition the serving loop emits (one ``attribution`` instant
+per retired batch, carrying queue-wait / admit / probe / post /
+pipeline-wait / wire-stall / merge / dense / retire stage seconds) as a
+request-weighted table with per-stage shares of end-to-end latency.  See
+docs/OBSERVABILITY.md for the span taxonomy.
 """
 from __future__ import annotations
 
@@ -127,12 +132,77 @@ def print_summary(rows: list[dict], file=sys.stdout) -> None:
         )
 
 
+# Stage order of the serving loop's per-batch attribution instants
+# (mirrored from src/repro/runtime/serving.py ATTR_STAGES, plus the
+# per-request queue wait the instant carries as a batch mean).
+ATTR_STAGES = (
+    "queue_wait", "admit_other", "probe", "post", "pipeline_wait",
+    "wire_stall", "merge", "dense", "retire_other",
+)
+
+
+def attribution(trace: dict) -> dict:
+    """Aggregate the per-batch ``attribution`` instants into one breakdown.
+
+    Returns ``{stages: {name: seconds}, total_s, requests, batches,
+    coverage}`` where seconds are request-weighted sums (each request in a
+    batch experienced every batch stage) and coverage is attributed/total —
+    1.0 when the stage tiling is exact.
+    """
+    stages = {s: 0.0 for s in ATTR_STAGES}
+    total = 0.0
+    requests = 0
+    batches = 0
+    for e in trace["traceEvents"]:
+        if e.get("ph") != "i" or e.get("name") != "attribution":
+            continue
+        a = e.get("args", {})
+        n = int(a.get("requests", 1))
+        batches += 1
+        requests += n
+        stages["queue_wait"] += a.get("queue_wait_mean_s", 0.0) * n
+        for s in ATTR_STAGES[1:]:
+            stages[s] += a.get(s, 0.0) * n
+        total += (a.get("total_s", 0.0) + a.get("queue_wait_mean_s", 0.0)) * n
+    attributed = sum(stages.values())
+    return {
+        "stages": stages,
+        "total_s": total,
+        "requests": requests,
+        "batches": batches,
+        "coverage": attributed / total if total else 1.0,
+    }
+
+
+def print_attribution(rep: dict, file=sys.stdout) -> None:
+    if not rep["batches"]:
+        print("no attribution instants in trace (serve with a Tracer "
+              "attached)", file=file)
+        return
+    n = max(1, rep["requests"])
+    hdr = f"{'stage':14s} {'total_s':>10s} {'per_req_ms':>11s} {'share':>7s}"
+    print(f"attribution over {rep['requests']} requests / "
+          f"{rep['batches']} batches", file=file)
+    print(hdr, file=file)
+    print("-" * len(hdr), file=file)
+    for s, v in rep["stages"].items():
+        share = v / rep["total_s"] if rep["total_s"] else 0.0
+        print(f"{s:14s} {v:10.4f} {1e3 * v / n:11.4f} {100 * share:6.1f}%",
+              file=file)
+    print("-" * len(hdr), file=file)
+    print(f"{'end-to-end':14s} {rep['total_s']:10.4f} "
+          f"{1e3 * rep['total_s'] / n:11.4f} "
+          f"(coverage {100 * rep['coverage']:.2f}%)", file=file)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace", help="Chrome-trace JSON (from --trace / "
                     "Tracer.save)")
     ap.add_argument("--summarize", action="store_true",
                     help="print the per-stage breakdown table")
+    ap.add_argument("--attribution", action="store_true",
+                    help="print the per-request latency attribution table")
     args = ap.parse_args(argv)
     trace = load(args.trace)
     problems = validate(trace)
@@ -146,6 +216,9 @@ def main(argv=None) -> int:
     if args.summarize:
         print()
         print_summary(summarize(trace))
+    if args.attribution:
+        print()
+        print_attribution(attribution(trace))
     return 0
 
 
