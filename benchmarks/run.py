@@ -61,6 +61,7 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
 
     from benchmarks import (
+        chaos_bench,
         dedup_bench,
         hotcache_bench,
         loadgen_bench,
@@ -109,6 +110,14 @@ def main(argv=None) -> None:
         f"sums={'ok' if o['sum_consistent'] else 'INCONSISTENT'} "
         f"trace={'ok' if o['trace_valid'] else 'INVALID'}"
     )
+    chaos_derive = lambda o: (  # noqa: E731
+        f"fired={o['faults_fired']} "
+        f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
+        f"hangs={'none' if o['zero_hangs'] else 'HUNG'} "
+        f"p99_tail={o['p99_inflation_tail']:.2f}x"
+        f"{'' if o['p99_bounded'] else ' UNBOUNDED'} "
+        f"replicated={o['rows_re_replicated']} moved={o['moved_rows']}"
+    )
     loadgen_derive = lambda o: (  # noqa: E731
         f"capacity={o['capacity_qps']:.0f}rps "
         f"p99_knee={o['p99_knee_ms']:.1f}ms "
@@ -153,6 +162,11 @@ def main(argv=None) -> None:
             "loadgen_smoke",
             lambda: loadgen_bench.run(smoke=True),
             loadgen_derive,
+        )
+        bench(
+            "chaos_smoke",
+            lambda: chaos_bench.run(smoke=True),
+            chaos_derive,
         )
         write_json()
         failed = [r for r in rows if r[2] == "FAILED"]
@@ -210,6 +224,7 @@ def main(argv=None) -> None:
     bench("dedup", dedup_bench.run, dedup_derive)
     bench("obs", obs_bench.run, obs_derive)
     bench("loadgen", lambda: loadgen_bench.run(smoke=False), loadgen_derive)
+    bench("chaos", lambda: chaos_bench.run(smoke=False), chaos_derive)
 
     print()
     try:

@@ -35,6 +35,17 @@ from repro.core.sharding import FusedTables, RangeRouter
 # --------------------------------------------------------------------- host
 
 
+class ShardUnavailableError(RuntimeError):
+    """A lookup addressed an embedding shard that is currently down.
+
+    Raised by a degraded shard stand-in (repro.chaos.DegradedShard) for rows
+    it cannot serve from its cache-tier replica while the real shard is
+    dropped: the lookup *fails fast* at the server boundary instead of
+    hanging on a dead host.  The engine pool catches it and parks the work
+    request until the shard is restored (repro.rdma.engine), so the batch
+    still resolves — late, never wrong."""
+
+
 class EmbeddingServer:
     """One embedding server: a row-range shard resident in host DRAM."""
 

@@ -132,19 +132,37 @@ def apply_reshard(table: np.ndarray, plan: ReshardPlan, tables: FusedTables) -> 
     is returned implicitly by `permutation(plan, tables)` so the router can
     translate old global row ids to new ones.
     """
+    if len(table) != tables.total_rows:
+        raise ValueError(
+            f"table has {len(table)} rows, fused layout expects "
+            f"{tables.total_rows}"
+        )
     perm = permutation(plan, tables)
     return table[perm]
 
 
 def permutation(plan: ReshardPlan, tables: FusedTables) -> np.ndarray:
-    """old-global-row order for the new layout (concatenated new shards)."""
-    parts = []
-    b = plan.boundaries.astype(int)
-    for s in range(tables.num_shards):
-        parts.append(np.arange(b[s], b[s + 1]))
+    """old-global-row order for the new layout (concatenated new shards).
+
+    Validates that the plan's ranges are a contiguous, exhaustive cover of
+    the fused row space — a malformed plan (wrong boundary count, gaps,
+    overlaps, or a short/long cover) would silently drop or duplicate rows
+    in ``apply_reshard``, so it is rejected loudly instead.
+    """
+    b = np.asarray(plan.boundaries, np.int64)
+    if len(b) != tables.num_shards + 1:
+        raise ValueError(
+            f"plan has {len(b) - 1} ranges for {tables.num_shards} shards"
+        )
+    if b[0] != 0 or b[-1] != tables.total_rows:
+        raise ValueError(
+            f"plan covers [{b[0]}, {b[-1]}), fused table is "
+            f"[0, {tables.total_rows})"
+        )
+    if (np.diff(b) < 0).any():
+        raise ValueError("plan boundaries must be non-decreasing")
+    parts = [np.arange(b[s], b[s + 1]) for s in range(tables.num_shards)]
     perm = np.concatenate(parts)
-    if len(perm) != tables.total_rows:
-        # variable-size ranges: pad/truncate to keep the fused size (ranges
-        # are contiguous and exhaustive by construction, so this is exact).
-        assert len(perm) == tables.total_rows, "reshard must cover all rows"
+    # Contiguous non-decreasing ranges from 0 to total_rows are exhaustive
+    # by construction; the checks above make that a guarantee, not a hope.
     return perm

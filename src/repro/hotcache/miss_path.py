@@ -180,6 +180,26 @@ class HostHashCache:
         self.freq *= factor
 
 
+def resident_rows_in_range(
+    cache: HostHashCache, lo: int, hi: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Cached (fused id, row) pairs whose id falls in ``[lo, hi)``.
+
+    The chaos layer's shard-drop recovery source: when an embedding shard
+    goes down, the rows of that shard still resident in the cache tier are
+    exact f32 copies of the DRAM rows (inserts copy ``table_np[ids]``), so
+    re-replicating them into a degraded stand-in serves hot traffic
+    bit-identically through the outage.
+    """
+    if cache.num_slots == 0:
+        return (
+            np.zeros(0, np.int64),
+            np.zeros((0, cache.rows.shape[1]), cache.rows.dtype),
+        )
+    sel = (cache.keys != EMPTY_KEY) & (cache.keys >= lo) & (cache.keys < hi)
+    return cache.keys[sel].copy(), cache.rows[sel].copy()
+
+
 @dataclasses.dataclass
 class TieredStats:
     lookups: int = 0  # valid (id, slot) pairs probed

@@ -77,6 +77,49 @@ def make_serving_dlrm(scale: float = 1.0) -> R.RecsysConfig:
     )
 
 
+def _build_chaos(args, tables, tracer):
+    """--chaos-seed / --reshard-to -> a bound-ready ChaosInjector (or None)."""
+    chaos_seed = getattr(args, "chaos_seed", None)
+    reshard_to = getattr(args, "reshard_to", None)
+    if chaos_seed is None and reshard_to is None:
+        return None
+    from repro.chaos import (
+        FAULT_RESHARD,
+        ChaosInjector,
+        FaultSchedule,
+        FaultSpec,
+    )
+
+    # Triggers are admitted-batch counts; approximate the batch budget from
+    # the request budget and the mean diurnal burst (~32 requests/batch —
+    # the batcher cuts variable buckets, so this only shapes *where* in
+    # the run faults land; the exit summary reports what actually fired).
+    n_batches = max(4, args.requests // 32)
+    faults = ()
+    if chaos_seed is not None:
+        faults = FaultSchedule.generate(
+            chaos_seed, num_batches=n_batches,
+            num_engines=args.num_engines,
+            num_shards=tables.num_shards,
+            n_faults=args.chaos_faults,
+        ).faults
+    if reshard_to is not None:
+        faults = faults + (FaultSpec(
+            FAULT_RESHARD, at_batch=max(1, n_batches // 2),
+            target=reshard_to,
+        ),)
+    schedule = FaultSchedule(
+        faults=tuple(sorted(faults, key=lambda f: f.at_batch)),
+        seed=chaos_seed if chaos_seed is not None else 0,
+    )
+    logger.info(
+        "chaos armed: %d faults over ~%d batches (%s)",
+        len(schedule.faults), n_batches,
+        ", ".join(f"{f.kind}@{f.at_batch}" for f in schedule.faults),
+    )
+    return ChaosInjector(schedule, tracer=tracer)
+
+
 def run(args) -> dict:
     cfg = make_serving_dlrm(args.scale)
     rng = np.random.default_rng(args.seed)
@@ -96,12 +139,13 @@ def run(args) -> dict:
     slo = SloMonitor(SloObjective(
         latency_target_s=1e-3 * args.slo_target_ms,
     ))
+    chaos = _build_chaos(args, tables, tracer)
     server = FlexEMRServer(
         cfg, params, tables, controller=controller,
         num_engines=args.num_engines, pushdown=not args.no_pushdown,
         engine=args.engine, pipeline_depth=args.pipeline_depth,
         dedup=not args.no_dedup,
-        tracer=tracer, registry=registry, slo=slo,
+        tracer=tracer, registry=registry, slo=slo, chaos=chaos,
     )
     deadline_s = (
         1e-3 * args.deadline_ms if args.deadline_ms is not None else None
@@ -167,6 +211,8 @@ def run(args) -> dict:
         if driver_stats is not None:
             out["loadgen"] = driver_stats
         out["slo"] = slo.summary()
+        if chaos is not None:
+            out["chaos"] = chaos.summary()
         eng = server.engine_summary()
         if eng is not None:
             out["rdma_engine"] = eng
@@ -233,6 +279,18 @@ def main():
                     help="stamp every request with this deadline; goodput "
                     "then counts deadline-met completions")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seeded fault schedule (engine kill, "
+                    "shard drop + cache-tier re-replication, straggler "
+                    "storm, live reshard) during the run; the chaos "
+                    "summary prints at exit.  Pooled engine only")
+    ap.add_argument("--chaos-faults", type=int, default=4,
+                    help="number of faults FaultSchedule.generate draws "
+                    "for --chaos-seed")
+    ap.add_argument("--reshard-to", type=int, default=None, metavar="N",
+                    help="live-reshard the embedding tier to N shards "
+                    "mid-run (quiesce-free, under traffic); composes "
+                    "with --chaos-seed")
     args = ap.parse_args()
     run(args)
 

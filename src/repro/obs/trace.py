@@ -47,6 +47,7 @@ CAT_STEAL = "steal"  # work stealing
 CAT_HEDGE = "hedge"  # hedge arm / win / cancel
 CAT_PREFETCH = "prefetch"  # piggybacked speculative fetches
 CAT_SLO = "slo"  # burn-rate alert fire/resolve instants, attribution marks
+CAT_CHAOS = "chaos"  # fault injection: kill/drop/storm/reshard + recovery
 
 # The wall-clock serving thread's Perfetto thread row.
 TID_RANKER = 0

@@ -56,6 +56,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.flow_control import CreditGate
+from repro.core.lookup_engine import ShardUnavailableError
 from repro.obs.trace import (
     CAT_HEDGE,
     CAT_WIRE,
@@ -152,6 +153,9 @@ class _EngineThread(threading.Thread):
         self.stolen_from = 0  # WRs siblings stole from this thread (steals out)
         self.cancelled = 0  # hedge losers this thread skipped or discarded
         self.hedge_wins = 0  # hedge duplicates this thread won the slot with
+        # Fault injection (repro.chaos): a killed thread re-deals its queued
+        # work to the survivors and exits.  Set only under pool._cond.
+        self.dead = False
 
     # All deque access happens under pool._cond's lock.
 
@@ -162,7 +166,7 @@ class _EngineThread(threading.Thread):
             return [self.deque.popleft() for _ in range(n)]
         if pool.work_stealing:
             victim = max(
-                (t for t in pool.threads if t is not self),
+                (t for t in pool.threads if t is not self and not t.dead),
                 key=lambda t: len(t.deque),
                 default=None,
             )
@@ -181,18 +185,30 @@ class _EngineThread(threading.Thread):
         pool = self.pool
         while True:
             with pool._cond:
+                if self.dead:
+                    return  # killed: deque was re-dealt by kill_thread
                 group = self._take_group()
                 while group is None:
                     if pool._stopping:
                         return
                     pool._cond.wait(timeout=0.05)
+                    if self.dead:
+                        return
                     group = self._take_group()
             # Post the doorbell group under the credit window, outside the
             # pool lock: credits are returned by this same thread after the
             # group completes, so the window can never deadlock the pool.
             pool.gate.acquire(len(group))
             try:
-                for wr, handle in group:
+                for i, (wr, handle) in enumerate(group):
+                    if self.dead:
+                        # Killed mid-batch: the WR in progress (if any) has
+                        # already settled; re-deal the unexecuted remainder
+                        # to the survivors and exit.  Credits for the whole
+                        # group are returned by the finally below.
+                        with pool._cond:
+                            pool._redeal_locked(group[i:])
+                        return
                     self._execute(wr, handle)
             finally:
                 pool.gate.release(len(group))
@@ -219,33 +235,59 @@ class _EngineThread(threading.Thread):
             # on an RNIC completion, so cross-batch pipelining effects are
             # measurable end to end on a machine with no RNIC (and too few
             # cores for CPU-side overlap to stand in for wire latency).
+            # A straggler-storm WR (latency_mult > 1) flies slower.
             t = self.pool.timing
-            time.sleep(t.t_server + wr.response_bytes / t.wire_bps)
+            time.sleep(
+                (t.t_server + wr.response_bytes / t.wire_bps)
+                * wr.latency_mult
+            )
             if handle.settled(wr.slot):
                 self._cancel(wr)  # the twin landed while we "flew"
                 return
-        try:
-            srv = self.pool.servers[wr.server]
-            if wr.dedup:
-                # Unique-row wire protocol (§3.1.1): the server ships each
-                # row once; the ranker scatters via wr.gather_idx.  A
-                # contiguous WR is a range read — one slice, no gather.
-                if wr.contiguous:
-                    res = srv.read_range(int(wr.row_ids[0]), len(wr.row_ids))
+        attempts = 0
+        while True:
+            try:
+                srv = self.pool._resolve_server(wr)
+                if wr.dedup:
+                    # Unique-row wire protocol (§3.1.1): the server ships
+                    # each row once; the ranker scatters via wr.gather_idx.
+                    # A contiguous WR is a range read — one slice, no gather.
+                    if wr.contiguous:
+                        res = srv.read_range(
+                            int(wr.row_ids[0]), len(wr.row_ids)
+                        )
+                    else:
+                        res = srv.lookup_rows(wr.row_ids)
+                elif wr.pushdown:
+                    res = srv.lookup_pooled(
+                        wr.row_ids, wr.bag_ids, wr.num_bags
+                    )
                 else:
-                    res = srv.lookup_rows(wr.row_ids)
-            elif wr.pushdown:
-                res = srv.lookup_pooled(wr.row_ids, wr.bag_ids, wr.num_bags)
+                    res = (srv.lookup_rows(wr.row_ids), wr.bag_ids)
+            except ShardUnavailableError as exc:
+                # Dropped shard, cold row: park until the shard is restored
+                # (the batch resolves late, never wrong).  _park re-checks
+                # the dropped mark under the pool lock — if the shard was
+                # restored between the raise and the park, retry once
+                # against the (now-forwarding) server; a shard that raises
+                # while NOT marked dropped fails fast instead.
+                if self.pool._park(wr, handle):
+                    return
+                attempts += 1
+                if attempts < 2:
+                    continue
+                if not handle._settle(wr.slot, error=exc):
+                    self._cancel(wr)
+                    return
+            except Exception as exc:  # a bad WR must not kill the thread
+                if not handle._settle(wr.slot, error=exc):
+                    self._cancel(wr)  # losing twin failed: error dropped too
+                    return
             else:
-                res = (srv.lookup_rows(wr.row_ids), wr.bag_ids)
-        except Exception as exc:  # a bad WR must not kill the engine thread
-            if not handle._settle(wr.slot, error=exc):
-                self._cancel(wr)  # losing twin failed: error dropped too
-                return
-        else:
-            if not handle._settle(wr.slot, result=res):
-                self._cancel(wr)  # raced a twin and lost: result dropped
-                return
+                if not handle._settle(wr.slot, result=res):
+                    self._cancel(wr)  # raced a twin and lost: result dropped
+                    return
+            break
         self.executed += 1
         if wr.hedge_dup:
             # The straggler re-issue beat its primary to the slot.
@@ -298,6 +340,22 @@ class RdmaEnginePool:
         self._submit_lock = threading.Lock()
         # shard -> thread dealing table (heat-weighted); None = shard % T.
         self._affinity: np.ndarray | None = None
+        # ---- fault-injection state (repro.chaos) ----------------------
+        # Degraded stand-ins for dropped shards: shard -> wrapper object.
+        # Consulted FIRST by _resolve_server, so in-flight WRs of any epoch
+        # see the outage.  Mutated only under _cond.
+        self._degraded: dict[int, object] = {}
+        # Parked work: shard -> [(wr, handle)] of cold-row WRs waiting for
+        # the shard to be restored.  Guarded by _cond.
+        self._parked: dict[int, list] = {}
+        # Per-server straggler-storm multipliers, stamped onto WRs at
+        # submit (serving thread — the only writer is the chaos injector,
+        # which runs on the same thread).
+        self.latency_mults: dict[int, float] = {}
+        self.killed_threads = 0
+        self.wrs_redealt = 0  # queued WRs re-dealt off dead threads
+        self.wrs_parked = 0  # WRs parked on a dropped shard
+        self.parked_released = 0  # parked WRs re-dispatched at restore
         # Virtual-layer accounting (deterministic, from plan_schedule).
         # Latencies keep a bounded recent window so a long-running server
         # neither grows without bound nor reports lifetime-global p99s.
@@ -337,6 +395,25 @@ class RdmaEnginePool:
             if self._closed:
                 raise RuntimeError("submit() on a closed RdmaEnginePool")
             bid = self.batches  # trace correlation key for this batch's WRs
+            with self._cond:
+                dead = frozenset(
+                    t.tid for t in self.threads if t.dead
+                )
+            if self.latency_mults:
+                # Straggler storm (repro.chaos): stamp the per-server
+                # multiplier before pricing, so the virtual schedule and
+                # the emulate_wire sleep degrade together.
+                for wr in subreqs:
+                    m = self.latency_mults.get(wr.server)
+                    if m is not None:
+                        wr.latency_mult = m
+            for wr in subreqs:
+                # Epoch binding (live reshard): the WR executes against the
+                # server object of the map it was cut from, even if a
+                # reshard swaps self.servers before it reaches the front of
+                # a deque (dual-read handoff window).
+                if 0 <= wr.server < len(self.servers):
+                    wr.server_obj = self.servers[wr.server]
             plan = plan_schedule(
                 subreqs,
                 self.num_threads,
@@ -348,6 +425,7 @@ class RdmaEnginePool:
                 state=self.vstate,
                 tracer=self.tracer if self.tracer.enabled else None,
                 batch_id=bid,
+                disabled=dead,
             )
             handle = BatchHandle(
                 len(subreqs), plan.makespan, v_end=plan.end
@@ -376,10 +454,14 @@ class RdmaEnginePool:
                     # Real dispatch follows the virtual assignment (affinity
                     # + deterministic steals); threads that finish their
                     # share early still steal the stragglers in real time.
+                    alive = [t for t in self.threads if not t.dead]
                     for tid, wrs in enumerate(plan.assignments):
-                        self.threads[tid].deque.extend(
-                            (wr, handle) for wr in wrs
-                        )
+                        tgt = self.threads[tid]
+                        if tgt.dead:
+                            # A thread died between the plan and this
+                            # dispatch: its share goes to a survivor.
+                            tgt = alive[tid % len(alive)]
+                        tgt.deque.extend((wr, handle) for wr in wrs)
                     self._cond.notify_all()
         return handle
 
@@ -403,17 +485,25 @@ class RdmaEnginePool:
             if self._stopping:
                 return 0  # draining: the primaries are guaranteed to land
             n = 0
+            alive = [t for t in self.threads if not t.dead]
             for wr in handle.wrs:
                 if handle.settled(wr.slot):
                     continue
                 owner = wr.engine if 0 <= wr.engine < self.num_threads \
                     else wr.server % self.num_threads
-                others = [t for t in self.threads if t.tid != owner]
+                others = [t for t in alive if t.tid != owner]
                 target = min(
-                    others or self.threads, key=lambda t: (len(t.deque), t.tid)
+                    others or alive, key=lambda t: (len(t.deque), t.tid)
                 )
+                # The duplicate takes the healthy path: a storm multiplier
+                # on the primary is exactly what the hedge mitigates.
                 target.deque.appendleft(
-                    (dataclasses.replace(wr, hedge_dup=True), handle)
+                    (
+                        dataclasses.replace(
+                            wr, hedge_dup=True, latency_mult=1.0
+                        ),
+                        handle,
+                    )
                 )
                 # A posted duplicate moves wire bytes like any other WR
                 # (a loser cancelled before execution is the lucky case;
@@ -426,6 +516,112 @@ class RdmaEnginePool:
                 self.hedged += n
                 self._cond.notify_all()
         return n
+
+# ------------------------------------------------- faults & elasticity
+
+    def _resolve_server(self, wr: LookupSubrequest):
+        """The server object a WR executes against.
+
+        Resolution order: a degraded stand-in for a dropped shard (the
+        outage must be visible to in-flight WRs of every epoch), else the
+        WR's submit-time epoch binding (live reshard: old WRs read old
+        shards), else the current map."""
+        srv = self._degraded.get(wr.server)
+        if srv is not None:
+            return srv
+        if wr.server_obj is not None:
+            return wr.server_obj
+        return self.servers[wr.server]
+
+    def _park(self, wr: LookupSubrequest, handle: BatchHandle) -> bool:
+        """Park a cold-row WR of a dropped shard until restore.  Returns
+        False if the shard is no longer marked dropped (restored between
+        the server's raise and this park) — the caller retries."""
+        with self._cond:
+            lst = self._parked.get(wr.server)
+            if lst is None:
+                return False
+            lst.append((wr, handle))
+            self.wrs_parked += 1
+            return True
+
+    def _redeal_locked(self, items: list) -> None:
+        """Re-deal (wr, handle) pairs to the least-loaded alive threads.
+        Caller holds _cond."""
+        alive = [t for t in self.threads if not t.dead]
+        for item in items:
+            tgt = min(alive, key=lambda t: (len(t.deque), t.tid))
+            tgt.deque.append(item)
+        self.wrs_redealt += len(items)
+        self._cond.notify_all()
+
+    def kill_thread(self, tid: int) -> int:
+        """Kill one engine thread mid-flight (fault injection).
+
+        Its queued WRs are re-dealt to the survivors, the thread exits
+        after at most its current WR, and every later submit plans around
+        it (``plan_schedule(disabled=...)``).  Refuses to kill the last
+        alive thread.  Returns the number of WRs re-dealt."""
+        with self._cond:
+            t = self.threads[tid]
+            if t.dead:
+                return 0
+            if sum(1 for x in self.threads if not x.dead) <= 1:
+                raise ValueError("cannot kill the last alive engine thread")
+            t.dead = True
+            self.killed_threads += 1
+            moved = [t.deque.popleft() for _ in range(len(t.deque))]
+            self._redeal_locked(moved)
+            self._cond.notify_all()
+        return len(moved)
+
+    def alive_threads(self) -> int:
+        with self._cond:
+            return sum(1 for t in self.threads if not t.dead)
+
+    def mark_shard_dropped(self, server: int, degraded) -> None:
+        """Drop one shard: ``degraded`` (e.g. ``repro.chaos.DegradedShard``)
+        stands in for it — serving cache-replicated hot rows, raising
+        ``ShardUnavailableError`` for cold rows, which this pool parks."""
+        with self._cond:
+            self._degraded[server] = degraded
+            self._parked.setdefault(server, [])
+
+    def restore_shard(self, server: int) -> int:
+        """End a shard outage: drop the stand-in and re-dispatch the parked
+        WRs (the 'cold rows return after shard restore' path).  Returns the
+        number of WRs released."""
+        with self._cond:
+            self._degraded.pop(server, None)
+            parked = self._parked.pop(server, [])
+            if parked:
+                self._redeal_locked(parked)
+                self.parked_released += len(parked)
+            self._cond.notify_all()
+        return len(parked)
+
+    def dropped_shards(self) -> list[int]:
+        with self._cond:
+            return sorted(self._parked)
+
+    def parked_count(self) -> int:
+        with self._cond:
+            return sum(len(v) for v in self._parked.values())
+
+    def set_servers(self, servers: Sequence) -> None:
+        """Swap the whole shard map (live reshard cutover).  In-flight WRs
+        keep their submit-time epoch binding (``wr.server_obj``); only WRs
+        cut after this call read the new map."""
+        with self._cond:
+            if self._degraded:
+                raise RuntimeError(
+                    "cannot reshard while shards are dropped: restore first"
+                )
+            self.servers = list(servers)
+
+    def set_server(self, server: int, srv) -> None:
+        with self._cond:
+            self.servers[server] = srv
 
     def set_affinity(self, affinity: np.ndarray | None) -> None:
         """Install a shard -> thread dealing table (e.g. ``heat_affinity``
@@ -498,6 +694,14 @@ class RdmaEnginePool:
                 "p50_latency_us": 1e6 * pct[50.0],
                 "p99_latency_us": 1e6 * pct[99.0],
                 "credit_window": self.gate.summary(),
+                # Fault-injection counters (repro.chaos):
+                "killed_threads": self.killed_threads,
+                "alive_threads": sum(1 for t in th if not t.dead),
+                "wrs_redealt": self.wrs_redealt,
+                "wrs_parked": self.wrs_parked,
+                "parked_now": sum(len(v) for v in self._parked.values()),
+                "parked_released": self.parked_released,
+                "dropped_shards": sorted(self._parked),
             }
 
     # ------------------------------------------------------------------ close
@@ -510,6 +714,20 @@ class RdmaEnginePool:
             self._closed = True
         with self._cond:
             self._stopping = True
+            # Backstop for a shard still dropped at shutdown: parked WRs
+            # settle with the outage error so their batches resolve (fail
+            # loudly, never hang).  The orderly path is chaos.drain(),
+            # which restores shards *before* the server closes the pool.
+            for server, parked in self._parked.items():
+                for wr, handle in parked:
+                    handle._settle(
+                        wr.slot,
+                        error=ShardUnavailableError(
+                            f"shard {server} still down at pool close"
+                        ),
+                    )
+            self._parked.clear()
+            self._degraded.clear()
             self._cond.notify_all()
         for t in self.threads:
             t.join(timeout=5.0)

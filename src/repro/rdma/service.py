@@ -82,8 +82,8 @@ import time
 import numpy as np
 
 from repro.core.flow_control import CreditGate
-from repro.core.lookup_engine import HostLookupService
-from repro.core.sharding import FusedTables
+from repro.core.lookup_engine import EmbeddingServer, HostLookupService
+from repro.core.sharding import FusedTables, RangeRouter
 from repro.obs.trace import CAT_HEDGE, CAT_LOOKUP, CAT_WIRE, NULL_TRACER
 from repro.rdma.engine import BatchHandle, RdmaEnginePool
 from repro.rdma.verbs import LookupSubrequest, VerbsTiming
@@ -589,6 +589,46 @@ class PooledLookupService(HostLookupService):
         Closed-loop form of ``lookup_async`` — post, wait, merge.
         """
         return self.lookup_async(indices, mask, mean_normalize).wait()
+
+    # ------------------------------------------------------------- elasticity
+
+    def apply_reshard_live(
+        self, new_tables: FusedTables, new_table: np.ndarray
+    ) -> int:
+        """Quiesce-free shard-map cutover (runtime.elastic reshard).
+
+        Fused ids are invariant across shard counts (``FusedTables`` pads
+        the fused space so field offsets never move), so only *ownership*
+        changes: the router, the server list, and the pool's shard map are
+        swapped atomically while lookups stay in flight.  WRs already
+        posted keep their submit-time epoch binding
+        (``LookupSubrequest.server_obj``) and read the old shard objects —
+        the dual-read handoff window — so nothing drains and nothing
+        returns wrong rows.  In-flight coalescing entries for rows whose
+        *owning shard* changed are invalidated: a later batch must not
+        borrow a row fetched under the old map once its WR retires, because
+        the donor slot indexes a retired epoch.  Returns the number of
+        in-flight table entries invalidated.
+        """
+        rps = new_tables.rows_per_shard
+        servers = [
+            EmbeddingServer(s, s * rps, new_table[s * rps : (s + 1) * rps])
+            for s in range(new_tables.num_shards)
+        ]
+        old_rps = self.tables.rows_per_shard
+        with self._coalesce_lock:
+            migrated = [
+                fid
+                for fid in self._inflight_rows
+                if fid // old_rps != fid // rps
+            ]
+            for fid in migrated:
+                del self._inflight_rows[fid]
+            self.tables = new_tables
+            self.router = RangeRouter(new_tables)
+            self.servers = servers
+            self.pool.set_servers(servers)
+        return len(migrated)
 
     # --------------------------------------------------------------- affinity
 

@@ -134,6 +134,16 @@ class LookupSubrequest:
     # True on the duplicate WRs RdmaEnginePool.hedge re-issues (so the real
     # layer can attribute hedge wins/cancellations to the right side).
     hedge_dup: bool = False
+    # Straggler-storm injection (repro.chaos): >1 multiplies this WR's wire
+    # and server time, both in the virtual pricing below and in the pool's
+    # emulate_wire sleep.  Hedge duplicates reset it to 1.0 — the re-issue
+    # takes the healthy path, which is what makes hedging a mitigation.
+    latency_mult: float = 1.0
+    # Epoch binding for quiesce-free live resharding (repro.chaos): the
+    # engine pool stamps the server OBJECT this WR was cut against at
+    # submit, so a reshard that swaps the shard map mid-flight cannot
+    # re-route an old-epoch WR onto a new-epoch shard (dual-read window).
+    server_obj: object = None
     # Stamped by plan_schedule:
     engine: int = -1
     stolen: bool = False
@@ -219,6 +229,7 @@ def plan_schedule(
     state: VerbsState | None = None,
     tracer=None,
     batch_id: int = -1,
+    disabled=None,
 ) -> SchedulePlan:
     """Deterministic virtual-time schedule of one batch's work requests.
 
@@ -242,9 +253,20 @@ def plan_schedule(
     instants, and ``credit_stall`` spans for posts the in-flight window
     blocked — all tagged with ``batch_id`` so they nest inside the batch's
     ``lookup_batch`` span.  ``None`` (the default) emits nothing.
+
+    ``disabled`` is the set of engine tids that have died (repro.chaos
+    engine-kill): the virtual model re-deals their affinity traffic across
+    the survivors (same deterministic remap the real dispatch applies),
+    never advances their clocks, and never steals from or for them — so the
+    post-fault virtual latencies price the degraded pool, not the healthy
+    one.
     """
     if num_engines <= 0:
         raise ValueError("num_engines must be positive")
+    disabled = frozenset(disabled or ())
+    alive = [t for t in range(num_engines) if t not in disabled]
+    if not alive:
+        raise ValueError("all engines disabled: nothing can post")
     # A doorbell group must fit the credit window or its own post could
     # never be admitted (same clamp RdmaEnginePool applies).
     doorbell_batch = max(1, min(doorbell_batch, max_inflight))
@@ -269,6 +291,8 @@ def plan_schedule(
             tid0 = int(affinity[r.server]) % num_engines
         else:
             tid0 = r.server % num_engines
+        if tid0 in disabled:  # dead engine: deterministic re-deal
+            tid0 = alive[tid0 % len(alive)]
         queues[tid0].append(r)
 
     # An engine idle since before this batch arrived starts at the arrival;
@@ -285,7 +309,7 @@ def plan_schedule(
     end = arrival
 
     while any(queues):
-        tid = min(range(num_engines), key=lambda t: (clock[t], t))
+        tid = min(alive, key=lambda t: (clock[t], t))
         if clock[tid] == float("inf"):
             break  # no engine can make progress (stealing disabled)
         q = queues[tid]
@@ -294,9 +318,7 @@ def plan_schedule(
             while q and len(group) < doorbell_batch:
                 group.append(q.popleft())
         elif work_stealing:
-            victim = max(
-                range(num_engines), key=lambda t: (len(queues[t]), -t)
-            )
+            victim = max(alive, key=lambda t: (len(queues[t]), -t))
             n = max(1, min(len(queues[victim]) // 2, doorbell_batch))
             for _ in range(n):
                 group.append(queues[victim].pop())
@@ -356,10 +378,12 @@ def plan_schedule(
             post_start = t
             t += timing.t_post
             qk = (tid, r.server)
-            wire = r.response_bytes / timing.wire_bps
+            # A straggler-storm WR (latency_mult > 1, repro.chaos) pays the
+            # multiplier on wire + server time — the slow-server model.
+            wire = r.response_bytes / timing.wire_bps * r.latency_mult
             wire_start = max(t, qp_busy.get(qk, 0.0))
             qp_busy[qk] = wire_start + wire
-            r.v_complete = wire_start + wire + timing.t_server
+            r.v_complete = wire_start + wire + timing.t_server * r.latency_mult
             heapq.heappush(inflight, r.v_complete)
             r.engine = tid
             assignments[tid].append(r)

@@ -22,17 +22,28 @@ from repro.core.sharding import FusedTables, TableSpec, make_fused_tables
 class ReshardResult:
     tables: FusedTables
     table: np.ndarray  # [new_total_rows, D]
+    moved_rows: int = 0  # logical rows whose owning shard changed
 
 
 def reshard_tables(
     old: FusedTables, table: np.ndarray, new_num_shards: int
 ) -> ReshardResult:
-    """Re-partition to `new_num_shards` embedding servers losslessly."""
+    """Re-partition to `new_num_shards` embedding servers losslessly.
+
+    Fused row ids are invariant (``make_fused_tables`` pads at the END, so
+    field offsets never move); only ownership — ``rows_per_shard`` and the
+    range split — changes.  ``moved_rows`` counts the logical rows a live
+    migration would actually have to copy between servers.
+    """
     new = make_fused_tables(list(old.specs), table.shape[1], new_num_shards)
     rows = np.zeros((new.total_rows, table.shape[1]), table.dtype)
     n = min(old.raw_rows, new.raw_rows)
     rows[:n] = table[:n]
-    return ReshardResult(tables=new, table=rows)
+    ids = np.arange(n, dtype=np.int64)
+    moved = int(
+        (ids // old.rows_per_shard != ids // new.rows_per_shard).sum()
+    )
+    return ReshardResult(tables=new, table=rows, moved_rows=moved)
 
 
 def reshard_params(

@@ -76,6 +76,13 @@ RULES: dict[str, dict[str, tuple[str, float]]] = {
         # capacity is a wall-clock rate: gate only catastrophic collapse
         "capacity_qps": ("higher_rel", 0.5),
     },
+    "chaos_smoke": {
+        "bit_equal": ("equal", 0.0),
+        "zero_hangs": ("equal", 0.0),
+        "p99_bounded": ("equal", 0.0),
+        # deterministic per seed: every scheduled fault must keep firing
+        "faults_fired": ("higher_rel", 0.0),
+    },
 }
 
 
