@@ -7,10 +7,10 @@ quantity), then the full §Roofline table assembled from the dry-run artifacts.
   PYTHONPATH=src python -m benchmarks.run --smoke    # seconds-scale subset
 
 ``--smoke`` runs the fast regression subset — the hotcache, prefetch, rdma,
-pipeline, dedup, obs, and loadgen benches in their shrunk configurations —
-so cache-, prefetch-, engine-, pipeline-, wire-dedup-, observability-, and
-latency-under-load regressions show up in the bench trajectory without
-paying for the full figure sweep.  ``--json PATH`` additionally writes each
+pipeline, dedup, pushdown, obs, and loadgen benches in their shrunk
+configurations — so cache-, prefetch-, engine-, pipeline-, wire-dedup-,
+pooling-pushdown-, observability-, and latency-under-load regressions show
+up in the bench trajectory without paying for the full figure sweep.  ``--json PATH`` additionally writes each
 bench's scalar metrics for ``tools/bench_history.py`` to gate against the
 committed ``benchmarks/baselines/BENCH_*.json`` snapshots.
 """
@@ -118,6 +118,13 @@ def main(argv=None) -> None:
         f"{'' if o['p99_bounded'] else ' UNBOUNDED'} "
         f"replicated={o['rows_re_replicated']} moved={o['moved_rows']}"
     )
+    pushdown_derive = lambda o: (  # noqa: E731
+        f"byte_reduction={o['byte_reduction']:.2f}x "
+        f"segments={o['pooled_segments']} "
+        f"req_frac={o['request_frac_on']:.2f} "
+        f"invariant={'ok' if o['bit_equal'] else 'VIOLATED'} "
+        f"sim_err={o['sim_rel_err']:.1%}"
+    )
     loadgen_derive = lambda o: (  # noqa: E731
         f"capacity={o['capacity_qps']:.0f}rps "
         f"p99_knee={o['p99_knee_ms']:.1f}ms "
@@ -152,6 +159,13 @@ def main(argv=None) -> None:
             "dedup_smoke",
             lambda: dedup_bench.run(smoke=True),
             dedup_derive,
+        )
+        from benchmarks import fig4_pooling_bytes
+
+        bench(
+            "pushdown_smoke",
+            lambda: fig4_pooling_bytes.run_pushdown(smoke=True),
+            pushdown_derive,
         )
         bench(
             "obs_smoke",
@@ -222,6 +236,11 @@ def main(argv=None) -> None:
     bench("rdma", rdma_bench.run, rdma_derive)
     bench("pipeline", pipeline_bench.run, pipeline_derive)
     bench("dedup", dedup_bench.run, dedup_derive)
+    bench(
+        "pushdown",
+        lambda: fig4_pooling_bytes.run_pushdown(smoke=False),
+        pushdown_derive,
+    )
     bench("obs", obs_bench.run, obs_derive)
     bench("loadgen", lambda: loadgen_bench.run(smoke=False), loadgen_derive)
     bench("chaos", lambda: chaos_bench.run(smoke=False), chaos_derive)

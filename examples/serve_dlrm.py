@@ -1,11 +1,14 @@
 """End-to-end serving example: the full FlexEMR pipeline over a diurnal
 request trace — bucketed batching, the §3.2 multi-threaded rdma engine pool
-with pooling pushdown, cross-batch pipelining, the adaptive cache controller
-(whose per-shard heat also drives the pool's skew-aware dealing), pool-side
-straggler hedging (cancel-the-loser), and the jit'd dense ranker.
+with pooling pushdown (near-memory segment reduction composed with the
+wire dedup; the exit summary's ``pushdown`` block reports the request- vs
+response-direction byte split), cross-batch pipelining, the adaptive cache
+controller (whose per-shard heat also drives the pool's skew-aware
+dealing), pool-side straggler hedging (cancel-the-loser), and the jit'd
+dense ranker.
 
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000
-  PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --no-pushdown    # fig-4a ablation
+  PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --no-pushdown    # gather+pool ablation
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --engine legacy  # pre-pool engine
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 --pipeline-depth 1  # closed loop
   PYTHONPATH=src python examples/serve_dlrm.py --requests 2000 \

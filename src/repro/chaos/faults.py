@@ -204,3 +204,15 @@ class DegradedShard:
         out = np.zeros((num_bags, rows.shape[1]), np.float64)
         np.add.at(out, bag_ids, rows)
         return out
+
+    def pool_segments(
+        self, row_ids: np.ndarray, seg_bounds: np.ndarray
+    ) -> np.ndarray:
+        if self._restored:
+            return self.real.pool_segments(row_ids, seg_bounds)
+        seg_bounds = np.asarray(seg_bounds, np.int64)
+        rows = self._gather(np.asarray(row_ids))
+        S = len(seg_bounds) - 1
+        out = np.zeros((S, rows.shape[1]), np.float64)
+        np.add.at(out, np.repeat(np.arange(S), np.diff(seg_bounds)), rows)
+        return out

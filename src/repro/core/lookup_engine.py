@@ -83,6 +83,27 @@ class EmbeddingServer:
         np.add.at(out, bag_ids, self.rows[row_ids - self.start_row])
         return out
 
+    def pool_segments(
+        self, row_ids: np.ndarray, seg_bounds: np.ndarray
+    ) -> np.ndarray:
+        """Near-memory bag reduction: sum-pool contiguous id *segments*.
+
+        ``seg_bounds`` has S+1 entries; segment ``s`` is
+        ``row_ids[seg_bounds[s]:seg_bounds[s+1]]`` — one per-bag id run that
+        lives wholly on this shard.  Returns ``[S, D]`` float64 partial sums
+        (response bytes ~ S * D instead of rows * D).  Like
+        ``lookup_pooled``, f32 rows accumulate exactly in float64, so a bag
+        split across shards/tiers merges to the same bits regardless of the
+        cut — the partial-sum protocol's bit-equality foundation.
+        """
+        seg_bounds = np.asarray(seg_bounds, np.int64)
+        S = len(seg_bounds) - 1
+        out = np.zeros((S, self.rows.shape[1]), np.float64)
+        seg_ids = np.repeat(np.arange(S), np.diff(seg_bounds))
+        rows = self.rows[np.asarray(row_ids, np.int64) - self.start_row]
+        np.add.at(out, seg_ids, rows)
+        return out
+
 
 @dataclasses.dataclass
 class Subrequest:

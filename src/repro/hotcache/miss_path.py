@@ -207,6 +207,10 @@ class TieredStats:
     batches: int = 0
     bytes_no_cache: int = 0  # what the wire would carry without the cache
     bytes_network: int = 0  # what it actually carried (misses only)
+    bytes_request: int = 0  # request-direction bytes (scattered id lists /
+    # range descriptors posted by the miss WRs) — the channel segment
+    # pushdown makes the next bottleneck; NOT part of bytes_saved, which
+    # conserves response-direction bytes only.
     bytes_swap_in: int = 0  # refresh-path fetches
     admitted: int = 0
     # repro.prefetch attribution (all zero when no engine is attached):
@@ -239,6 +243,7 @@ class TieredStats:
             "hit_rate": self.hit_rate,
             "bytes_no_cache": self.bytes_no_cache,
             "bytes_network": self.bytes_network,
+            "bytes_request": self.bytes_request,
             "bytes_swap_in": self.bytes_swap_in,
             "bytes_prefetch": self.bytes_prefetch,
             "bytes_saved": self.bytes_saved,
@@ -428,10 +433,17 @@ class TieredLookupService:
         if self.collect_unique:
             uniq, counts = np.unique(fused[mask], return_counts=True)
         if self.track_bytes:
-            if uniq is not None and getattr(self.service, "dedup", False):
+            if (
+                uniq is not None
+                and getattr(self.service, "dedup", False)
+                and not getattr(self.service, "pushdown_segments", False)
+            ):
                 # Reuse the dedup prepass for the no-cache price too — the
                 # closed form needs exactly this sorted unique id set, so
                 # the batch pays ONE aggregation for heat + accounting.
+                # (Segment pushdown prices through the fan-out planner —
+                # the unique set alone can't see segment cuts — so it takes
+                # the network_bytes path below.)
                 self.stats.bytes_no_cache += \
                     self.service.unique_response_bytes(uniq)
             else:
@@ -493,6 +505,9 @@ class TieredLookupService:
                 self.stats.bytes_network += (
                     wrb if wrb is not None
                     else self.service.network_bytes(indices, cold)
+                )
+                self.stats.bytes_request += getattr(
+                    remote, "wire_request_bytes", 0
                 )
             if self.refresh_every:
                 # The tier-local LFU tracker only feeds the self-driven

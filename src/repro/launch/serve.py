@@ -216,6 +216,21 @@ def run(args) -> dict:
         eng = server.engine_summary()
         if eng is not None:
             out["rdma_engine"] = eng
+            # Pushdown byte split: response vs request direction, and how
+            # much of the response traffic the near-memory reduction pooled
+            # away (segments pooled * rows collapsed per segment).
+            resp = eng.get("wire_response_bytes", 0)
+            out["pushdown"] = {
+                "segment_pushdown": eng.get("segment_pushdown", False),
+                "pooled_segment_wrs": eng.get("pooled_segment_wrs", 0),
+                "pooled_segments": eng.get("pooled_segments", 0),
+                "pooled_rows": eng.get("pooled_rows", 0),
+                "wire_response_bytes": resp,
+                "wire_request_bytes": eng.get("wire_request_bytes", 0),
+                "request_frac": (
+                    eng.get("wire_request_bytes", 0) / resp if resp else 0.0
+                ),
+            }
         logger.info("serve summary: %s", json.dumps(out, indent=1))
         if tracer is not None:
             tracer.save(args.trace)
@@ -245,7 +260,11 @@ def main():
                     "dense stage runs (1 = closed loop, no overlap)")
     ap.add_argument("--cache-rows", type=int, default=65536)
     ap.add_argument("--scale", type=float, default=1.0)
-    ap.add_argument("--no-pushdown", action="store_true")
+    ap.add_argument("--no-pushdown", action="store_true",
+                    help="disable pooling pushdown (near-memory segment "
+                    "reduction on the miss path); lookups ship raw rows "
+                    "and pool ranker-side — outputs are bit-equal either "
+                    "way")
     ap.add_argument("--no-dedup", action="store_true",
                     help="disable the §3.1.1 wire dedup (unique-row "
                     "subrequests + in-flight coalescing + range WRs); "

@@ -238,7 +238,11 @@ class _EngineThread(threading.Thread):
             # A straggler-storm WR (latency_mult > 1) flies slower.
             t = self.pool.timing
             time.sleep(
-                (t.t_server + wr.response_bytes / t.wire_bps)
+                (
+                    t.t_server
+                    + wr.request_bytes / t.req_wire_bps
+                    + wr.response_bytes / t.wire_bps
+                )
                 * wr.latency_mult
             )
             if handle.settled(wr.slot):
@@ -258,6 +262,11 @@ class _EngineThread(threading.Thread):
                         )
                     else:
                         res = srv.lookup_rows(wr.row_ids)
+                elif wr.seg_bounds is not None:
+                    # Pooled-segment WR (pushdown near-memory reduction):
+                    # the server sum-pools each per-bag segment in float64
+                    # and ships one [S, D] block of partials.
+                    res = srv.pool_segments(wr.row_ids, wr.seg_bounds)
                 elif wr.pushdown:
                     res = srv.lookup_pooled(
                         wr.row_ids, wr.bag_ids, wr.num_bags
@@ -373,6 +382,12 @@ class RdmaEnginePool:
         self.hedged = 0  # duplicate WRs issued by hedge()
         self.wire_response_bytes = 0  # response payload actually posted
         self.wire_request_bytes = 0  # request-direction ids / descriptors
+        # Pushdown (near-memory reduction) accounting: pooled-segment WRs
+        # posted, segments (= per-shard partial vectors shipped) and the
+        # rows those segments reduced server-side instead of shipping.
+        self.pooled_segment_wrs = 0
+        self.pooled_segments = 0
+        self.pooled_rows = 0
         self.tracer = NULL_TRACER if tracer is None else tracer
         if self.tracer.enabled:
             for t in range(num_threads):
@@ -435,6 +450,11 @@ class RdmaEnginePool:
             self.subrequests += len(subreqs)
             self.wire_response_bytes += sum(r.response_bytes for r in subreqs)
             self.wire_request_bytes += sum(r.request_bytes for r in subreqs)
+            for r in subreqs:
+                if r.seg_bounds is not None:
+                    self.pooled_segment_wrs += 1
+                    self.pooled_segments += len(r.seg_bounds) - 1
+                    self.pooled_rows += len(r.row_ids)
             self.virtual_latencies.append(plan.makespan)
             self.virtual_busy += np.asarray(plan.busy)
             self.virtual_span = max(self.virtual_span, plan.end)
@@ -678,6 +698,9 @@ class RdmaEnginePool:
                 "subrequests": self.subrequests,
                 "wire_response_bytes": self.wire_response_bytes,
                 "wire_request_bytes": self.wire_request_bytes,
+                "pooled_segment_wrs": self.pooled_segment_wrs,
+                "pooled_segments": self.pooled_segments,
+                "pooled_rows": self.pooled_rows,
                 "doorbells": self.doorbells,
                 "virtual_steals": self.virtual_steals,
                 "virtual_credit_stall_s": self.virtual_credit_stall_s,

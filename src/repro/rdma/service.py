@@ -127,7 +127,8 @@ class LookupHandle:
         # In-flight coalescing (§3.1.1): rows this lookup borrows from a
         # previous batch's still-pending (or settled) WRs instead of
         # re-posting.  Each record is (donor BatchHandle, donor slot,
-        # row indices within the donor WR, bag ids to scatter into).
+        # row indices within the donor WR, bag ids to scatter into, fused
+        # ids — the last used for borrow re-registration at submit).
         self._borrows = borrows or []
         # Fused ids this handle's own WRs registered in the service's
         # in-flight row table (purged at wait()).
@@ -204,7 +205,14 @@ class LookupHandle:
                 self._service._unregister(self)
             t_work = time.perf_counter()  # engine done: merge work starts
             for wr, res in zip(bh.wrs, results):  # issue order: f64 merge
-                if wr.dedup:
+                if wr.seg_bounds is not None:
+                    # pushdown partial-sum merge: one [D] float64 partial
+                    # per segment, added to its destination bag — the same
+                    # bits the gather+pool path would have accumulated,
+                    # because f32 rows sum exactly in float64 under ANY
+                    # partition of a bag into partials
+                    np.add.at(out, wr.bag_ids, np.asarray(res))
+                elif wr.dedup:
                     # unique-row protocol: scatter each fetched row into
                     # every bag position that referenced it (the same
                     # values the duplicated transfer would have added)
@@ -214,7 +222,7 @@ class LookupHandle:
                 else:
                     rows, bags = res  # ranker-side pooling (fig 4a)
                     np.add.at(out, bags, rows)
-        for donor, slot, d_idx, bags in self._borrows:
+        for donor, slot, d_idx, bags, _fids in self._borrows:
             # Borrowed rows: scatter from the donor batch's settled slot.
             # The donor resolves on its own engine threads regardless of
             # who waits first, so this cannot deadlock; in the FIFO serving
@@ -227,6 +235,10 @@ class LookupHandle:
                     "coalesced donor subrequest failed"
                 )
             np.add.at(out, bags, np.asarray(rows)[d_idx])
+        # A handle that posted nothing of its own (every row borrowed)
+        # still owns table entries via borrow re-registration: purge them
+        # now that it is retiring.  Idempotent after the finally above.
+        self._service._unregister(self)
         self._out = self._service._finalize(
             out.reshape(B, F, D), self._mask, self._mean_normalize
         )
@@ -263,6 +275,8 @@ class PooledLookupService(HostLookupService):
         range_coalesce: bool = True,
         range_min_rows: int = 8,
         inflight_coalesce: bool = True,
+        pushdown_segments: bool = False,
+        pushdown_min_rows: int = 2,
         tracer=None,
     ):
         self._init_core(tables, table_array, pushdown, dedup=dedup)
@@ -271,16 +285,37 @@ class PooledLookupService(HostLookupService):
             raise ValueError("max_rows_per_subrequest must be positive")
         if range_min_rows < 2:
             raise ValueError("range_min_rows must be >= 2")
+        if pushdown_min_rows < 2:
+            raise ValueError("pushdown_min_rows must be >= 2")
         self.max_rows_per_subrequest = max_rows_per_subrequest
         # §3.1.1 wire-dedup knobs (all no-ops unless dedup=True):
         self.range_coalesce = range_coalesce
         self.range_min_rows = range_min_rows  # shortest run worth a range WR
         self.inflight_coalesce = inflight_coalesce
-        # In-flight row table: fused id -> (BatchHandle, slot, index within
-        # the WR's unique row list) for every row posted and not yet
-        # retired.  Guarded by _coalesce_lock (submissions may come from a
-        # drain thread as well as the serving thread).
-        self._inflight_rows: dict[int, tuple[BatchHandle, int, int]] = {}
+        # Near-memory pooling pushdown over the dedup cut: per-(bag, shard)
+        # id segments whose rows are *exclusive* to that segment (no other
+        # reference in the batch, not borrowable from an in-flight batch)
+        # are pooled server-side — one [D] partial per segment crosses the
+        # wire instead of one row per id.  Non-exclusive rows keep the
+        # dedup unique-row protocol, so the two levers compose: pushdown
+        # takes the poolable segments, dedup the remainder.  A segment
+        # shorter than pushdown_min_rows moves the same bytes either way,
+        # so it stays in the dedup path.
+        self.pushdown_segments = pushdown_segments and pushdown
+        self.pushdown_min_rows = pushdown_min_rows
+        # In-flight row table: fused id -> (owner LookupHandle, fetching
+        # BatchHandle, slot, index within that WR's unique row list) for
+        # every row some un-retired lookup posted OR borrowed.  The owner
+        # is whichever handle most recently posted/borrowed the row — the
+        # entry lives until the OWNER retires, so a borrow chain survives
+        # its donor's retirement (pipeline depth >= 3).  The data pointer
+        # (BatchHandle, slot, idx) always names the original fetcher,
+        # whose settled slot outlives its retirement.  Guarded by
+        # _coalesce_lock (submissions may come from a drain thread as well
+        # as the serving thread).
+        self._inflight_rows: dict[
+            int, tuple[LookupHandle, BatchHandle, int, int]
+        ] = {}
         self._coalesce_lock = threading.Lock()
         # Dedup-layer counters (engine_summary):
         self.deduped_rows = 0  # duplicate row refs removed before posting
@@ -324,6 +359,21 @@ class PooledLookupService(HostLookupService):
             return subreqs
         chunk = self.max_rows_per_subrequest
         subreqs: list[LookupSubrequest] = []
+        if self.pushdown_segments and len(fused):
+            # Segment pushdown without the dedup prepass: carve the
+            # poolable segments, then chunk the remainder the legacy
+            # duplicated way.  The carve returns the remainder sorted by
+            # (shard, bag, id) — shard-major — so the per-shard bounds
+            # just need recomputing.
+            stats = {"pooled_wrs": 0, "pooled_segments": 0,
+                     "pooled_rows": 0}
+            fused, bag = self._segment_subrequests(
+                fused, bag, num_bags, entry_bytes, None, subreqs, stats
+            )
+            bounds = np.searchsorted(
+                fused // self.tables.rows_per_shard,
+                np.arange(self.tables.num_shards + 1),
+            )
         for s in range(self.tables.num_shards):
             lo, hi = int(bounds[s]), int(bounds[s + 1])
             for c0 in range(lo, hi, chunk):
@@ -348,6 +398,99 @@ class PooledLookupService(HostLookupService):
                 )
         return subreqs
 
+    def _segment_subrequests(
+        self,
+        fused: np.ndarray,
+        bag: np.ndarray,
+        num_bags: int,
+        entry_bytes: int,
+        borrow_table: dict | None,
+        subreqs: list,
+        stats: dict,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Carve poolable per-(bag, shard) segments into pooled-segment WRs.
+
+        A segment is a maximal run of *exclusive* ids — referenced nowhere
+        else in the batch (global count 1) and not borrowable from an
+        in-flight batch (a borrow moves zero new bytes; a pooled share
+        cannot beat that) — belonging to one bag on one shard.  The carve
+        sorts each (shard, bag) span by id first, so a zipf workload's hot
+        head ids (duplicated, hence non-poolable) cluster away from the
+        exclusive tail instead of splintering it: one hot id per bag would
+        otherwise halve every segment.  Any ordering is merge-safe — the
+        ranker adds partials in f64 over exactly-representable f32 rows,
+        so the bag sum is independent of how the bag is partitioned.
+        Segments shorter than ``pushdown_min_rows`` stay on the dedup path
+        (a 1-row "partial" ships the same bytes as the row).  Poolable
+        segments of one shard pack into pooled-segment WRs (each
+        ``<= max_rows_per_subrequest`` rows, but a segment is never split:
+        its partial must come from exactly one server for the merge to add
+        whole-segment partials).  Appends the WRs to ``subreqs`` and
+        returns the ``(fused, bag)`` remainder for the dedup machinery.
+        """
+        rps = self.tables.rows_per_shard
+        uniq, inv = np.unique(fused, return_inverse=True)
+        counts = np.bincount(inv, minlength=len(uniq))
+        exclusive = counts[inv] == 1
+        if borrow_table:
+            in_table = np.fromiter(
+                (int(u) in borrow_table for u in uniq), bool, len(uniq)
+            )
+            exclusive &= ~in_table[inv]
+        order = np.lexsort((fused, bag, fused // rps))
+        f2, b2 = fused[order], bag[order]
+        s2 = f2 // rps
+        e2 = exclusive[order]
+        brk = np.flatnonzero(
+            (np.diff(b2) != 0) | (np.diff(s2) != 0) | (np.diff(e2) != 0)
+        ) + 1
+        edges = np.concatenate(([0], brk, [len(f2)]))
+        seg_len = np.diff(edges)
+        poolable = e2[edges[:-1]] & (seg_len >= self.pushdown_min_rows)
+        if not poolable.any():
+            return fused, bag
+        seg_shard = s2[edges[:-1]]
+        seg_bag = b2[edges[:-1]]
+        chunk = self.max_rows_per_subrequest
+        for s in np.unique(seg_shard[poolable]):
+            segs = np.flatnonzero(poolable & (seg_shard == s))
+            # Greedy pack: whole segments up to the chunk budget per WR (at
+            # least one segment per WR — a segment is never split).
+            packs: list[list[int]] = [[]]
+            rows_in_pack = 0
+            for g in segs:
+                n = int(seg_len[g])
+                if packs[-1] and rows_in_pack + n > chunk:
+                    packs.append([])
+                    rows_in_pack = 0
+                packs[-1].append(int(g))
+                rows_in_pack += n
+            for pack in packs:
+                row_ids = np.concatenate(
+                    [f2[edges[g] : edges[g + 1]] for g in pack]
+                )
+                sb = np.concatenate(([0], np.cumsum(seg_len[pack])))
+                subreqs.append(
+                    LookupSubrequest(
+                        server=int(s),
+                        row_ids=row_ids,
+                        bag_ids=seg_bag[pack],
+                        num_bags=num_bags,
+                        pushdown=True,
+                        # one <bag:4B, partial:D*itemsize> entry per segment
+                        response_bytes=len(pack) * entry_bytes,
+                        # scattered id list in the WQE writes, 8 B per id
+                        request_bytes=8 * len(row_ids),
+                        slot=len(subreqs),
+                        seg_bounds=sb,
+                    )
+                )
+                stats["pooled_wrs"] += 1
+                stats["pooled_segments"] += len(pack)
+                stats["pooled_rows"] += len(row_ids)
+        rest = order[~np.repeat(poolable, seg_len)]
+        return fused[rest], bag[rest]
+
     def _dedup_subrequests(
         self,
         fused: np.ndarray,
@@ -358,25 +501,38 @@ class PooledLookupService(HostLookupService):
     ) -> tuple[list[LookupSubrequest], list, dict]:
         """Unique-row WR cut (+ borrow plan against the in-flight table).
 
-        Runs the dedup pass (one stable ``np.unique`` + inverse over the
+        With ``pushdown_segments`` the poolable per-(bag, shard) segments
+        are carved into pooled-segment WRs first (``_segment_subrequests``)
+        and the dedup machinery below runs on the remainder.  Runs the
+        dedup pass (one stable ``np.unique`` + inverse over the
         shard-sorted plan), drops rows already on the wire for an earlier
         batch (when ``borrow_table`` is given), folds sort-adjacent
         survivors into range WRs, and chunks the scattered rest.  Returns
         ``(subreqs, borrows, stats)`` where ``borrows`` are
-        ``(BatchHandle, slot, donor_idx, bag_ids)`` scatter records and
-        ``stats`` are the dedup-layer counter deltas.  Pure — no service
-        state is touched, so pricing callers (``network_bytes``) and
-        posting callers (``lookup_async``, which applies ``stats``) share
-        it without racing the counters.
+        ``(BatchHandle, slot, donor_idx, bag_ids, fused_ids)`` scatter
+        records and ``stats`` are the dedup-layer counter deltas.  Pure —
+        no service state is touched, so pricing callers (``network_bytes``)
+        and posting callers (``lookup_async``, which applies ``stats``)
+        share it without racing the counters.
         """
-        uniq, inv, ubounds = self._dedup_plan(fused)
-        n_u = len(uniq)
         stats = {
-            "deduped_rows": len(fused) - n_u,
+            "deduped_rows": 0,
             "coalesced_rows": 0,
             "coalesced_bytes": 0,
             "range_wrs": 0,
+            "pooled_wrs": 0,
+            "pooled_segments": 0,
+            "pooled_rows": 0,
         }
+        subreqs: list[LookupSubrequest] = []
+        if self.pushdown_segments and len(fused):
+            fused, bag = self._segment_subrequests(
+                fused, bag, num_bags, entry_bytes, borrow_table,
+                subreqs, stats,
+            )
+        uniq, inv, ubounds = self._dedup_plan(fused)
+        n_u = len(uniq)
+        stats["deduped_rows"] = len(fused) - n_u
         row_payload = entry_bytes - 4  # contiguous payload: no per-row tag
 
         # ---- in-flight coalescing: mark rows an earlier batch is fetching
@@ -390,7 +546,7 @@ class PooledLookupService(HostLookupService):
                 ent = borrow_table.get(int(uniq[k]))
                 if ent is None:
                     continue
-                bh, slot, idx = ent
+                _owner, bh, slot, idx = ent
                 owned[k] = False
                 kk = (id(bh), slot)
                 j = key_index.get(kk)
@@ -443,7 +599,6 @@ class PooledLookupService(HostLookupService):
         sorted_g = ginv[order]
         lo_of = np.searchsorted(sorted_g, np.arange(len(groups)))
         hi_of = np.searchsorted(sorted_g, np.arange(len(groups)), side="right")
-        subreqs: list[LookupSubrequest] = []
         for g, (pos, contiguous) in enumerate(groups):
             ent = order[lo_of[g] : hi_of[g]]
             n = len(pos)
@@ -481,7 +636,9 @@ class PooledLookupService(HostLookupService):
             )
             for j, (bh, slot) in enumerate(donor_keys):
                 ent = border[blo[j] : bhi[j]]
-                borrows.append((bh, slot, donor_idx[inv[ent]], bag[ent]))
+                borrows.append(
+                    (bh, slot, donor_idx[inv[ent]], bag[ent], fused[ent])
+                )
             n_borrowed = int((~owned).sum())
             stats["coalesced_rows"] = n_borrowed
             stats["coalesced_bytes"] = n_borrowed * entry_bytes
@@ -521,12 +678,48 @@ class PooledLookupService(HostLookupService):
                     fused, bag, num_bags, entry, borrow_table=table
                 )
                 batch = self.pool.submit(subreqs) if subreqs else None
-                if table is not None and batch is not None:
-                    for wr in subreqs:
-                        for i, fid in enumerate(wr.row_ids):
-                            self._inflight_rows[int(fid)] = (
-                                batch, wr.slot, i,
+                handle = LookupHandle(
+                    self, batch, (B, F, D), mask, mean_normalize,
+                    hedge_timeout=hedge_timeout,
+                    borrows=borrows,
+                    wire_response_bytes=sum(
+                        r.response_bytes for r in subreqs
+                    ),
+                    wire_request_bytes=sum(
+                        r.request_bytes for r in subreqs
+                    ),
+                )
+                if table is not None:
+                    reg: list[int] = []
+                    if batch is not None:
+                        for wr in subreqs:
+                            if wr.seg_bounds is not None:
+                                # Pooled-segment WRs return [S, D] partials,
+                                # not rows: nothing a later batch can borrow.
+                                continue
+                            for i, fid in enumerate(wr.row_ids):
+                                fid = int(fid)
+                                self._inflight_rows[fid] = (
+                                    handle, batch, wr.slot, i,
+                                )
+                                reg.append(fid)
+                    # Borrow re-registration: a borrowed row stays
+                    # borrowable for the NEXT pipelined batch even after
+                    # the donor retires — table *ownership* passes to this
+                    # handle while the entry keeps pointing at the original
+                    # fetcher's (BatchHandle, slot, index), whose settled
+                    # slot outlives the donor's retirement.  Without this,
+                    # the donor's retire purged the entry and batch N+2
+                    # re-posted a row batch N+1 still held (the coalesce
+                    # chain broke at pipeline depth >= 3).
+                    for dbh, slot, d_idx, _bags, fids in borrows:
+                        for i, fid in zip(d_idx, fids):
+                            fid = int(fid)
+                            self._inflight_rows[fid] = (
+                                handle, dbh, int(slot), int(i),
                             )
+                            reg.append(fid)
+                    handle._reg_ids = reg
                 # Counters move only when WRs are actually posted — the
                 # pricing path (network_bytes) never touches them.
                 self.deduped_rows += stats["deduped_rows"]
@@ -547,31 +740,36 @@ class PooledLookupService(HostLookupService):
                         args={"range_wrs": stats["range_wrs"],
                               "deduped_rows": stats["deduped_rows"]},
                     )
-        else:
-            subreqs = self._shard_subrequests(
-                fused, bag, bounds, num_bags, entry
-            )
-            batch = self.pool.submit(subreqs) if subreqs else None
-        handle = LookupHandle(
+                if stats["pooled_segments"]:
+                    self.tracer.instant(
+                        "segment_pushdown", CAT_WIRE, self.tracer.now(),
+                        args={"wrs": stats["pooled_wrs"],
+                              "segments": stats["pooled_segments"],
+                              "rows": stats["pooled_rows"]},
+                    )
+            return handle
+        subreqs = self._shard_subrequests(
+            fused, bag, bounds, num_bags, entry
+        )
+        batch = self.pool.submit(subreqs) if subreqs else None
+        return LookupHandle(
             self, batch, (B, F, D), mask, mean_normalize,
             hedge_timeout=hedge_timeout,
             borrows=borrows,
             wire_response_bytes=sum(r.response_bytes for r in subreqs),
             wire_request_bytes=sum(r.request_bytes for r in subreqs),
         )
-        if self.dedup and self.inflight_coalesce and batch is not None:
-            handle._reg_ids = [int(f) for wr in subreqs for f in wr.row_ids]
-        return handle
 
     def _unregister(self, handle: LookupHandle) -> None:
         """Purge a retired lookup's rows from the in-flight table (entries
-        a newer batch has not already overwritten by re-posting)."""
+        a newer batch has not already taken ownership of, by re-posting or
+        by borrow re-registration)."""
         if not handle._reg_ids:
             return
         with self._coalesce_lock:
             for fid in handle._reg_ids:
                 ent = self._inflight_rows.get(fid)
-                if ent is not None and ent[0] is handle._batch:
+                if ent is not None and ent[0] is handle:
                     del self._inflight_rows[fid]
         handle._reg_ids = []
 
@@ -665,6 +863,17 @@ class PooledLookupService(HostLookupService):
         D = self.servers[0].rows.shape[1]
         entry = 4 + D * self.servers[0].rows.dtype.itemsize
         if self.dedup:
+            if self.pushdown_segments:
+                # Segment pushdown changes the cut per-bag, so there is no
+                # bag-free closed form: price from the same pure planner
+                # the posting path uses (accounting == movement by
+                # construction).  No borrow table — this is the per-batch
+                # quantity, independent of live pipeline state.
+                fused, bag, _, num_bags, _ = self._plan_fanout(indices, mask)
+                subreqs, _, _ = self._dedup_subrequests(
+                    fused, bag, num_bags, entry, borrow_table=None
+                )
+                return sum(r.response_bytes for r in subreqs)
             offs = self.tables.field_offsets_array()
             fused = indices.astype(np.int64) + offs[None, :, None]
             return self.unique_response_bytes(
@@ -673,6 +882,13 @@ class PooledLookupService(HostLookupService):
         fused, bag, bounds, num_bags, _ = self._plan_fanout(indices, mask)
         if not self.pushdown:
             return len(fused) * entry  # one raw-row entry per hit
+        if self.pushdown_segments:
+            # The segment carve changes the chunk composition, so price
+            # from the same pure cut the posting path builds.
+            subreqs = self._shard_subrequests(
+                fused, bag, bounds, num_bags, entry
+            )
+            return sum(r.response_bytes for r in subreqs)
         # Chunked pushdown: one partial entry per distinct bag per CHUNK —
         # counted in closed form over (shard, chunk, bag) triples, no WR
         # objects on the accounting path.
@@ -718,6 +934,7 @@ class PooledLookupService(HostLookupService):
             coalesced_rows=self.coalesced_rows,
             coalesced_bytes=self.coalesced_bytes,
             range_wrs=self.range_wrs,
+            segment_pushdown=self.pushdown_segments,
         )
         return s
 

@@ -92,6 +92,13 @@ class VerbsTiming:
     t_steal: float = 0.25e-6  # deque CAS + cacheline bounce on a steal
     t_server: float = 3.0e-6  # embedding-server processing per WR
     wire_bps: float = 100e9 / 8  # response payload bytes/s
+    # Request-direction channel: the doorbell-batched WQE writes carry the
+    # scattered id lists (``request_bytes``) across the same full-duplex
+    # link, so a WR's span is request flight -> server -> response flight.
+    # Pushdown shrinks responses to one vector per segment, which makes the
+    # id-list requests the next wire bottleneck — pricing them keeps the
+    # virtual clock honest in that regime.
+    req_wire_bps: float = 100e9 / 8  # request payload bytes/s
     # Credit-return flight time charged to a post blocked on the in-flight
     # window: the window reopens when the credit *arrives back*, not when
     # the response completes.  Default = CreditedConnection's priority
@@ -131,6 +138,12 @@ class LookupSubrequest:
     gather_idx: np.ndarray | None = None  # scatter map: rows[gather_idx]
     contiguous: bool = False  # row_ids are one dense range (range read)
     request_bytes: int = 0  # request-direction bytes (ids or descriptor)
+    # Pooled-segment WR (pushdown near-memory reduction, §3.1 follow-on):
+    # S+1 bounds into row_ids; the server sum-pools each
+    # row_ids[seg_bounds[s]:seg_bounds[s+1]] segment in float64 and ships
+    # one [D] partial per segment — bag_ids then holds the S destination
+    # bags and response_bytes prices S vectors, not rows.
+    seg_bounds: np.ndarray | None = None
     # True on the duplicate WRs RdmaEnginePool.hedge re-issues (so the real
     # layer can attribute hedge wins/cancellations to the right side).
     hedge_dup: bool = False
@@ -380,10 +393,16 @@ def plan_schedule(
             qk = (tid, r.server)
             # A straggler-storm WR (latency_mult > 1, repro.chaos) pays the
             # multiplier on wire + server time — the slow-server model.
+            # The request-direction flight (scattered id lists in the WQE
+            # writes) serializes on the same QP ahead of the response:
+            # span = request flight -> server -> response flight.
             wire = r.response_bytes / timing.wire_bps * r.latency_mult
+            req = r.request_bytes / timing.req_wire_bps * r.latency_mult
             wire_start = max(t, qp_busy.get(qk, 0.0))
-            qp_busy[qk] = wire_start + wire
-            r.v_complete = wire_start + wire + timing.t_server * r.latency_mult
+            qp_busy[qk] = wire_start + req + wire
+            r.v_complete = (
+                wire_start + req + wire + timing.t_server * r.latency_mult
+            )
             heapq.heappush(inflight, r.v_complete)
             r.engine = tid
             assignments[tid].append(r)
@@ -395,7 +414,13 @@ def plan_schedule(
                     pid=PID_VIRTUAL, tid=tid,
                     args={"batch": batch_id, "slot": r.slot,
                           "server": r.server, "rows": len(r.row_ids),
-                          "bytes": r.response_bytes, "stolen": r.stolen},
+                          "bytes": r.response_bytes,
+                          "req_bytes": r.request_bytes,
+                          "pooled_segments": (
+                              len(r.seg_bounds) - 1
+                              if r.seg_bounds is not None else 0
+                          ),
+                          "stolen": r.stolen},
                 )
         busy[tid] += t - start
         clock[tid] = t

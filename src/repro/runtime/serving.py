@@ -93,6 +93,9 @@ class ServeMetrics:
     dense_seconds: float = 0.0
     bytes_no_cache: int = 0  # wire bytes a cache-less deployment would move
     bytes_network: int = 0  # wire bytes actually moved (misses only)
+    bytes_request: int = 0  # request-direction wire bytes (scattered id
+    # lists + range descriptors) — pushdown shrinks responses, making this
+    # the next bottleneck worth watching
     bytes_swap_in: int = 0  # hotcache refresh fetches
     bytes_prefetch: int = 0  # §3.1.2 piggybacked speculative fetches
     prefetch_issued: int = 0  # rows fetched speculatively
@@ -163,6 +166,7 @@ class ServeMetrics:
             "lookup_seconds": self.lookup_seconds,
             "dense_seconds": self.dense_seconds,
             "network_bytes": self.bytes_network,
+            "bytes_request": self.bytes_request,
             "bytes_no_cache": self.bytes_no_cache,
             "bytes_swap_in": self.bytes_swap_in,
             "bytes_prefetch": self.bytes_prefetch,
@@ -226,11 +230,13 @@ class FlexEMRServer:
         # in-flight coalescing across pipelined batches, range-coalesced
         # WRs (pooled engine); the legacy engine gets the unique-row
         # protocol too so A/Bs stay apples-to-apples.  Bit-equal on/off.
-        # NOTE: dedup REPLACES the fig-4b pushdown transfer for miss
-        # lookups (rows ship once, bags pool ranker-side) — the win scales
-        # with the traffic's duplicate fraction (dedup_bench reports the
-        # crossover as dedup_vs_pushdown_bytes); set False to restore
-        # per-bag partials on low-duplicate workloads.
+        # NOTE: dedup COMPOSES with segment pushdown for miss lookups:
+        # poolable per-(bag, shard) segments of exclusive ids ship as one
+        # pooled f64 partial per segment (near-memory reduction), the
+        # remainder rides the unique-row/range machinery (rows ship once,
+        # bags pool ranker-side).  Bit-equal on/off in every combination;
+        # dedup_bench still reports the dedup-vs-fig-4b crossover as
+        # dedup_vs_pushdown_bytes.
         tracer=None,  # obs.trace.Tracer | None: per-batch spans + per-WR
         # events on the wall + virtual timelines (docs/OBSERVABILITY.md).
         # None = NULL_TRACER: the hot path pays one branch per site.
@@ -261,6 +267,7 @@ class FlexEMRServer:
             # window); num_engines becomes the pool's thread count.
             self.service = PooledLookupService(
                 tables, table_np, num_threads=num_engines, pushdown=pushdown,
+                pushdown_segments=pushdown,
                 timing=timing, emulate_wire=emulate_wire, dedup=dedup,
                 tracer=self.tracer,
             )
@@ -416,6 +423,7 @@ class FlexEMRServer:
         self.metrics.cache_hits = s.hits
         self.metrics.bytes_no_cache = s.bytes_no_cache
         self.metrics.bytes_network = s.bytes_network
+        self.metrics.bytes_request = s.bytes_request
         self.metrics.bytes_swap_in = s.bytes_swap_in + self._plan_swap_in_bytes
         self.metrics.prefetch_hits = s.prefetch_hits
         self.metrics.prefetch_evicted = s.prefetch_evicted

@@ -87,6 +87,29 @@ class SimConfig:
     # counters (benchmarks/dedup_bench.py gates them within 10%).
     dup_frac: float = 0.0
     dedup_wire: bool = False
+    # Segment-pushdown bytes model (near-memory bag reduction, the fig-4a
+    # tentpole): `poolable_frac` is the share of a batch's post-dedup miss
+    # entries covered by poolable per-(bag, shard) segments — exclusive ids,
+    # segment length >= pushdown_min_rows, measured from the workload —
+    # and `rows_per_segment` the mean rows each pooled segment collapses
+    # into ONE [D] partial.  With `pushdown_wire=True` the poolable share
+    # of every response shrinks by 1/rows_per_segment, so the predicted
+    # response-byte reduction is
+    #     1 / (1 - poolable_frac * (1 - 1/rows_per_segment))
+    # — the quantity compare_pushdown checks against the engine pool's
+    # measured wire_response_bytes (benchmarks/fig4_pooling_bytes.py gates
+    # them within 10%).  Requests do NOT shrink: pushdown still posts every
+    # scattered id, which is why the request direction gets its own price.
+    poolable_frac: float = 0.0
+    rows_per_segment: float = 8.0
+    pushdown_wire: bool = False
+    # Request-direction wire channel: each posted subrequest carries
+    # `request_bytes_per_subrequest` of scattered-id-list / descriptor
+    # payload, serialized on the QP ahead of the response at
+    # `req_wire_bps` — the same two-term pricing as the verbs virtual
+    # clock (VerbsTiming.req_wire_bps).
+    request_bytes_per_subrequest: float = 0.0
+    req_wire_bps: float = 100e9 / 8
 
 
 class LookupSimulator:
@@ -138,19 +161,35 @@ class LookupSimulator:
         events: list[tuple[float, int]] = []  # (time, batch_id) completions
         now = 0.0
         wire_bytes = 0.0  # response payload moved (the dedup A/B quantity)
+        wire_request_bytes = 0.0  # scattered id lists / descriptors posted
 
         fanout = max(2, cfg.n_servers // 2)
         hit_rate = self.effective_hit_rate()
         if not 0.0 <= cfg.dup_frac < 1.0:
             raise ValueError("dup_frac must be in [0, 1)")
-        # Wire dedup strips the duplicate share of every miss payload.
-        miss_frac = (1.0 - hit_rate) * (
-            (1.0 - cfg.dup_frac) if cfg.dedup_wire else 1.0
+        if not 0.0 <= cfg.poolable_frac <= 1.0:
+            raise ValueError("poolable_frac must be in [0, 1]")
+        if cfg.rows_per_segment < 1.0:
+            raise ValueError("rows_per_segment must be >= 1")
+        # Wire dedup strips the duplicate share of every miss payload;
+        # segment pushdown then collapses the poolable share of what
+        # remains to one partial per segment (the two compose — dedup
+        # owns the duplicates, pushdown the exclusive segments).
+        pool_factor = (
+            1.0 - cfg.poolable_frac * (1.0 - 1.0 / cfg.rows_per_segment)
+            if cfg.pushdown_wire
+            else 1.0
+        )
+        miss_frac = (
+            (1.0 - hit_rate)
+            * ((1.0 - cfg.dup_frac) if cfg.dedup_wire else 1.0)
+            * pool_factor
         )
 
         def issue_batch(t_start: float) -> float:
             """Post one fan-out batch; returns completion time."""
-            nonlocal engine_free, unit_free, unit_owner, wire_bytes
+            nonlocal engine_free, unit_free, unit_owner, wire_bytes, \
+                wire_request_bytes
             # Each batch issues `fanout` subrequests drawn by popularity WITH
             # replacement — several subrequests of one lookup hitting the same
             # hot server is exactly the spatial locality / skew of §3.1-3.2.
@@ -168,6 +207,8 @@ class LookupSimulator:
                 miss_frac + cfg.prefetch_budget_frac
             )
             wire_bytes += sub_bytes * len(active)
+            req_bytes = cfg.request_bytes_per_subrequest
+            wire_request_bytes += req_bytes * len(active)
             # Even a fully-cached batch pays the ranker-local probe: floor
             # the completion at one t_post so hit_rate=1.0 yields a finite
             # (local-work-bound) throughput instead of a zero makespan.
@@ -192,6 +233,7 @@ class LookupSimulator:
                 resp = (
                     t_done_post
                     + cfg.t_server
+                    + req_bytes / cfg.req_wire_bps
                     + sub_bytes / cfg.wire_bps
                 )
                 done_t = max(done_t, resp)
@@ -230,6 +272,7 @@ class LookupSimulator:
             "makespan_s": makespan,
             "effective_hit_rate": hit_rate,
             "wire_bytes": wire_bytes,
+            "wire_request_bytes": wire_request_bytes,
             "engine_busy_s": engine_busy.tolist(),
             "engine_utilization": utilization.tolist(),
         }
@@ -413,6 +456,52 @@ def compare_dedup(dup_frac: float = 0.5, **overrides) -> dict:
     out["throughput_speedup"] = (
         out["dedup"]["throughput_batches_per_s"]
         / out["duplicated"]["throughput_batches_per_s"]
+    )
+    return out
+
+
+def compare_pushdown(
+    poolable_frac: float = 0.7,
+    rows_per_segment: float = 8.0,
+    **overrides,
+) -> dict:
+    """Segment-pushdown sweep: gather+pool vs near-memory bag reduction.
+
+    ``poolable_frac`` and ``rows_per_segment`` are measured from the real
+    engine's pooled-WR counters (``pooled_rows`` over post-dedup entries,
+    ``pooled_rows / pooled_segments`` — benchmarks/fig4_pooling_bytes.py
+    feeds both from the serving A/B).  Returns the two run dicts plus:
+
+    * ``byte_reduction`` — response wire bytes without pushdown / with; by
+      construction of the model this is
+      ``1 / (1 - poolable_frac * (1 - 1/rows_per_segment))``, the
+      prediction the bench gates against the engine pool's measured
+      ``wire_response_bytes`` (within 10%);
+    * ``request_fraction`` — request-direction bytes over response bytes
+      with pushdown ON: the channel that becomes the next bottleneck as
+      responses shrink (pushdown leaves requests untouched);
+    * ``throughput_speedup`` — pushdown-on over pushdown-off batch
+      throughput in the wire-bound regime.
+    """
+    out = {}
+    for name, on in (("gather", False), ("pushdown", True)):
+        cfg = SimConfig(
+            poolable_frac=poolable_frac,
+            rows_per_segment=rows_per_segment,
+            pushdown_wire=on,
+            **overrides,
+        )
+        out[name] = LookupSimulator(cfg).run()
+    out["byte_reduction"] = (
+        out["gather"]["wire_bytes"] / max(1e-9, out["pushdown"]["wire_bytes"])
+    )
+    out["request_fraction"] = (
+        out["pushdown"]["wire_request_bytes"]
+        / max(1e-9, out["pushdown"]["wire_bytes"])
+    )
+    out["throughput_speedup"] = (
+        out["pushdown"]["throughput_batches_per_s"]
+        / out["gather"]["throughput_batches_per_s"]
     )
     return out
 

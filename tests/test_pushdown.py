@@ -1,0 +1,433 @@
+"""Server-side pooling pushdown: near-memory bag reduction with partial-sum
+merge, plus the priced request-direction wire channel.
+
+The load-bearing contracts:
+  * bit-equality — the partial-sum protocol (per-(bag, shard) pooled
+    segments merged ranker-side in f64) returns EXACTLY the gather+pool
+    bits, across dedup on/off x pipeline depth {1,2,4} x hedge off/forced,
+    bags straddling 2+ shards, bags split cache-hit/miss, empty bags, and
+    a chaos shard drop (the DegradedShard contributes its partial);
+  * accounting == movement — ``network_bytes`` equals the response bytes
+    the pool posts with segment pushdown carving the plan;
+  * the fast path — an all-exclusive one-shard batch collapses to a single
+    pooled-segment WR shipping one partial per bag;
+  * borrow re-registration — a depth-3 pipeline's batch N+2 can borrow a
+    row batch N+1 itself borrowed from (retired) batch N (the ROADMAP
+    coalesce-chain bug);
+  * request-direction pricing — WR request bytes (scattered id lists)
+    serialize on the virtual clock ahead of the response flight.
+"""
+import numpy as np
+import pytest
+
+from repro.chaos import DegradedShard
+from repro.core.lookup_engine import EmbeddingServer, HostLookupService
+from repro.core.sharding import TableSpec, make_fused_tables
+from repro.data import synthetic as syn
+from repro.rdma import PooledLookupService, VerbsTiming
+
+
+def _setup(num_shards=4, dim=16, seed=11):
+    specs = (
+        TableSpec("a", 4000, nnz=8),
+        TableSpec("b", 1000, nnz=4, pooling="mean"),
+        TableSpec("c", 64, nnz=1),
+    )
+    tables = make_fused_tables(specs, dim, num_shards)
+    rng = np.random.default_rng(seed)
+    tnp = (0.05 * rng.normal(size=(tables.total_rows, dim))).astype(
+        np.float32
+    )
+    return tables, tnp
+
+
+def _svc(tables, tnp, segments=True, **kw):
+    kw.setdefault("num_threads", 2)
+    kw.setdefault("dedup", True)
+    return PooledLookupService(
+        tables, tnp, pushdown=True, pushdown_segments=segments, **kw
+    )
+
+
+def _ref(tables, tnp, batches):
+    legacy = HostLookupService(tables, tnp)
+    try:
+        return [legacy.lookup(i, m) for i, m in batches]
+    finally:
+        legacy.close()
+
+
+# ------------------------------------------------------- partial-sum merge
+
+
+def test_straddling_bag_pools_one_partial_per_shard():
+    """A bag spanning 3 shards ships 3 pooled partials that merge to the
+    gather+pool bits exactly."""
+    tables, tnp = _setup()  # field "a": rows [0, 4000), rps = 1280
+    rps = tables.rows_per_shard
+    assert rps < 4000  # the bag below really straddles
+    idx = np.zeros((1, 3, 8), np.int64)
+    msk = np.zeros((1, 3, 8), bool)
+    # 8 distinct "a" ids: 3 on shard 0, 2 on shard 1, 3 on shard 2.
+    idx[0, 0] = [7, 11, 13, rps + 5, rps + 9, 2 * rps + 1, 2 * rps + 3,
+                 2 * rps + 7]
+    msk[0, 0] = True
+    ref = _ref(tables, tnp, [(idx, msk)])
+    svc = _svc(tables, tnp)
+    try:
+        out = svc.lookup(idx, msk)
+        s = svc.engine_summary()
+    finally:
+        svc.close()
+    np.testing.assert_array_equal(out, ref[0])
+    assert s["pooled_segments"] == 3
+    assert s["pooled_rows"] == 8
+    # one partial-sum WR per shard touched
+    assert s["pooled_segment_wrs"] == 3
+
+
+def test_all_ids_one_shard_fast_path():
+    """All-exclusive ids of one shard: ONE pooled WR, one partial per bag,
+    response priced at one entry per segment."""
+    tables, tnp = _setup()
+    dim = tnp.shape[1]
+    idx = np.zeros((2, 3, 8), np.int64)
+    msk = np.zeros((2, 3, 8), bool)
+    idx[0, 0] = np.arange(8)
+    idx[1, 0] = np.arange(10, 18)
+    msk[:, 0] = True
+    ref = _ref(tables, tnp, [(idx, msk)])
+    svc = _svc(tables, tnp)
+    try:
+        out = svc.lookup(idx, msk)
+        s = svc.engine_summary()
+    finally:
+        svc.close()
+    np.testing.assert_array_equal(out, ref[0])
+    assert s["subrequests"] == s["pooled_segment_wrs"] == 1
+    assert s["pooled_segments"] == 2 and s["pooled_rows"] == 16
+    assert s["wire_response_bytes"] == 2 * (4 + dim * 4)
+
+
+def test_empty_bags_and_segments_off_batch():
+    """Bags with zero valid ids stay zero; a batch with nothing poolable
+    (all ids duplicated) falls through to the dedup machinery bit-equal."""
+    tables, tnp = _setup()
+    idx = np.zeros((4, 3, 8), np.int64)
+    msk = np.zeros((4, 3, 8), bool)
+    idx[0, 0] = np.arange(8)          # poolable bag
+    msk[0, 0] = True
+    idx[2, 0] = 7                      # all-duplicate bag (row 7 x 8)
+    msk[2, 0] = True
+    # bags 1 and 3: entirely empty
+    ref = _ref(tables, tnp, [(idx, msk)])
+    svc = _svc(tables, tnp)
+    try:
+        out = svc.lookup(idx, msk)
+    finally:
+        svc.close()
+    np.testing.assert_array_equal(out, ref[0])
+    assert not out[1].any() and not out[3].any()
+
+
+@pytest.mark.parametrize("dedup", [False, True])
+@pytest.mark.parametrize("depth", [1, 2, 4])
+@pytest.mark.parametrize("hedge", [None, 0.0])
+def test_pushdown_grid_bit_equal(rng, dedup, depth, hedge):
+    """The acceptance grid: segment pushdown outputs bit-equal the legacy
+    gather+pool across dedup on/off x depth {1,2,4} x hedge off/forced."""
+    tables, tnp = _setup()
+    batches = [syn.recsys_batch(rng, tables.specs, 24, alpha=1.3)
+               for _ in range(5)]
+    ref = _ref(tables, tnp, [(b["indices"], b["mask"]) for b in batches])
+    svc = _svc(tables, tnp, dedup=dedup, num_threads=4)
+    try:
+        outs: list = [None] * len(batches)
+        pending: list = []
+        for i, b in enumerate(batches):
+            pending.append(
+                (i, svc.lookup_async(b["indices"], b["mask"],
+                                     hedge_timeout=hedge))
+            )
+            if len(pending) >= depth:
+                j, h = pending.pop(0)
+                outs[j] = h.wait()
+        for j, h in pending:
+            outs[j] = h.wait()
+        assert svc.engine_summary()["pooled_segments"] > 0
+        assert not svc._inflight_rows  # retire purged every registration
+    finally:
+        svc.close()
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pushdown_accounting_equals_movement(rng):
+    """network_bytes prices exactly what the pool posts with the segment
+    carve active (pooled WRs at one entry per segment + dedup remainder)."""
+    tables, tnp = _setup()
+    svc = _svc(tables, tnp, inflight_coalesce=False)
+    try:
+        priced = 0
+        for _ in range(4):
+            b = syn.recsys_batch(rng, tables.specs, 24, alpha=1.3)
+            priced += svc.network_bytes(b["indices"], b["mask"])
+            svc.lookup(b["indices"], b["mask"])
+        assert priced == svc.pool.wire_response_bytes
+        assert svc.pool.pooled_segments > 0
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------ cache tier partials
+
+
+def test_bag_split_cache_hit_miss_bit_equal():
+    """A bag whose rows split between cache hits and pooled remote partials
+    merges to the no-cache bits exactly (f64 tier merge)."""
+    from repro.hotcache.miss_path import TieredLookupService
+
+    tables, tnp = _setup()
+    idx = np.zeros((2, 3, 8), np.int64)
+    msk = np.zeros((2, 3, 8), bool)
+    idx[0, 0] = np.arange(8)
+    idx[1, 0] = np.arange(20, 28)
+    msk[:, 0] = True
+    idx[0, 1, :4] = np.arange(4)  # mean-pooled field splits too
+    msk[0, 1, :4] = True
+    ref = _ref(tables, tnp, [(idx, msk)])
+
+    svc = _svc(tables, tnp)
+    tiered = TieredLookupService(svc, num_slots=64, refresh_every=0)
+    try:
+        # Prime the cache with HALF of bag 0's field-a rows + one field-b
+        # row: every looked-up bag mixes resident hits and remote misses.
+        hot = np.array([0, 2, 4, 6, tables.offsets[1] + 1], np.int64)
+        tiered.cache.insert(hot, tnp[hot], np.full(len(hot), 9.0), 1.0)
+        out = tiered.lookup(idx, msk)
+        s = svc.engine_summary()
+    finally:
+        tiered.service.close()
+    np.testing.assert_array_equal(out, ref[0])
+    assert tiered.stats.hits == len(hot)
+    assert s["pooled_segments"] > 0  # the misses still pooled server-side
+    # With pushdown, cache hits thin the segments (fewer ids on the
+    # request wire) without changing the partial count, so the saving
+    # shows up in the request direction, not the response direction.
+    assert tiered.stats.bytes_network <= tiered.stats.bytes_no_cache
+    assert tiered.stats.bytes_request == 8 * (20 - len(hot))
+
+
+# ------------------------------------------------------------ chaos partial
+
+
+def test_degraded_shard_contributes_pooled_partial():
+    """A dropped shard's stand-in pools its cache-replica rows into the
+    same f64 partial the real server would ship; cold rows fail fast."""
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(32, 8)).astype(np.float32)
+    real = EmbeddingServer(0, 0, data)
+    hot = np.array([3, 4, 7, 11], np.int64)
+    deg = DegradedShard(real, hot, data[hot].copy())
+    sb = np.array([0, 2, 4], np.int64)  # two 2-row segments
+    np.testing.assert_array_equal(
+        deg.pool_segments(hot, sb), real.pool_segments(hot, sb)
+    )
+    from repro.core.lookup_engine import ShardUnavailableError
+
+    with pytest.raises(ShardUnavailableError):
+        deg.pool_segments(np.array([3, 5], np.int64),
+                          np.array([0, 2], np.int64))
+    deg.restore()
+    np.testing.assert_array_equal(
+        deg.pool_segments(np.array([3, 5], np.int64),
+                          np.array([0, 2], np.int64)),
+        real.pool_segments(np.array([3, 5], np.int64),
+                           np.array([0, 2], np.int64)),
+    )
+
+
+def test_shard_drop_with_replica_serves_pooled_partials_bit_equal(rng):
+    """With shard 0 dropped but fully re-replicated, pooled-segment WRs are
+    served from the replica bit-identically (no parking, no refusal)."""
+    tables, tnp = _setup()
+    b = syn.recsys_batch(rng, tables.specs, 16, alpha=1.2)
+    svc = _svc(tables, tnp, num_threads=4)
+    try:
+        ref = svc.lookup(b["indices"], b["mask"])
+        srv0 = svc.pool.servers[0]
+        rows0 = np.arange(srv0.start_row,
+                          srv0.start_row + len(srv0.rows), dtype=np.int64)
+        deg = DegradedShard(srv0, rows0, srv0.rows.copy())
+        svc.pool.mark_shard_dropped(0, deg)
+        out = svc.lookup(b["indices"], b["mask"])
+        assert svc.pool.parked_count() == 0 and deg.refused == 0
+        assert deg.served_rows > 0
+        svc.pool.restore_shard(0)
+    finally:
+        svc.close()
+    np.testing.assert_array_equal(out, ref)
+
+
+# --------------------------------------------- borrow re-registration (bug)
+
+
+def test_borrow_chain_survives_depth3_pipeline(rng):
+    """ROADMAP bug: batch N+2 must borrow a row batch N+1 holds after batch
+    N (the original fetcher) retired — borrowed rows are re-registered
+    under the borrower, so the coalesce chain survives depth >= 3."""
+    tables, tnp = _setup()
+    b = syn.recsys_batch(rng, tables.specs, 16, alpha=1.4)
+    idx, msk = b["indices"], b["mask"]
+    # Segment pushdown carves borrowable ids OUT of pooled segments, so
+    # run the regression in the plain dedup protocol first...
+    svc = PooledLookupService(
+        tables, tnp, num_threads=4, dedup=True,
+        timing=VerbsTiming(t_server=2e-3), emulate_wire=True,
+    )
+    try:
+        h0 = svc.lookup_async(idx, msk)  # N: fetches everything
+        c0 = svc.coalesced_rows
+        h1 = svc.lookup_async(idx, msk)  # N+1: borrows ALL of N's rows
+        c1 = svc.coalesced_rows
+        assert c1 > c0
+        h0.wait()  # N retires — pre-fix this purged the whole table
+        h2 = svc.lookup_async(idx, msk)  # N+2: must borrow from N+1
+        c2 = svc.coalesced_rows
+        assert c2 - c1 == c1 - c0  # same rows borrowed again
+        np.testing.assert_array_equal(h1.wait(), h0.wait())
+        np.testing.assert_array_equal(h2.wait(), h0.wait())
+        assert not svc._inflight_rows
+    finally:
+        svc.close()
+    # ... and the same chain with the segment carve active.
+    svc = _svc(tables, tnp, num_threads=4,
+               timing=VerbsTiming(t_server=2e-3), emulate_wire=True)
+    try:
+        h0 = svc.lookup_async(idx, msk)
+        h1 = svc.lookup_async(idx, msk)
+        assert svc.coalesced_rows > 0
+        h0.wait()
+        h2 = svc.lookup_async(idx, msk)
+        np.testing.assert_array_equal(h2.wait(), h0.wait())
+        np.testing.assert_array_equal(h1.wait(), h0.wait())
+        assert not svc._inflight_rows
+    finally:
+        svc.close()
+
+
+# ----------------------------------------------- request-direction pricing
+
+
+def test_request_bytes_price_virtual_clock(rng):
+    """Slower request wire (req_wire_bps) must inflate virtual latency:
+    the scattered id lists serialize ahead of the response flight."""
+    tables, tnp = _setup()
+    b = syn.recsys_batch(rng, tables.specs, 32, alpha=1.2)
+    p99 = {}
+    for name, bps in (("fast", 100e9 / 8), ("slow", 1e6)):
+        svc = _svc(tables, tnp, timing=VerbsTiming(req_wire_bps=bps))
+        try:
+            svc.lookup(b["indices"], b["mask"])
+            s = svc.engine_summary()
+            p99[name] = s["p99_latency_us"]
+            assert s["wire_request_bytes"] > 0
+        finally:
+            svc.close()
+    assert p99["slow"] > p99["fast"]
+
+
+def test_serving_pushdown_on_off_bit_equal_live_controller(rng):
+    """FlexEMRServer scores bit-equal with segment pushdown on or off
+    under a live adaptive-cache controller, while the on path genuinely
+    pools segments."""
+    import jax
+
+    from repro.core.adaptive_cache import (
+        AdaptiveCacheController,
+        MemoryModel,
+    )
+    from repro.data.pipeline import BucketBatcher
+    from repro.models import recsys as R
+    from repro.runtime.serving import FlexEMRServer
+
+    tables_spec = (
+        TableSpec("big", 4000, nnz=4),
+        TableSpec("mid", 1000, nnz=2),
+        TableSpec("small", 64, nnz=1),
+    )
+    cfg = R.RecsysConfig(
+        name="t", arch="dlrm", tables=tables_spec, embed_dim=16, n_dense=13,
+        bottom_mlp=(64, 16), mlp=(64, 32),
+    )
+    params = R.init_params(cfg, jax.random.key(0))
+    tables = make_fused_tables(cfg.tables, cfg.embed_dim, 4)
+    reqs = []
+    for _ in range(24):
+        b = syn.recsys_batch(rng, cfg.tables, 1, n_dense=cfg.n_dense,
+                             alpha=1.2)
+        reqs.append({"indices": b["indices"][0], "mask": b["mask"][0],
+                     "dense": b["dense"][0]})
+
+    def serve(pushdown):
+        controller = AdaptiveCacheController(
+            cfg.tables, cfg.embed_dim,
+            MemoryModel(fixed_bytes=1 << 20, bytes_per_sample=1 << 10,
+                        hbm_bytes=1 << 28),
+            field_replication=False, max_rows=1024,
+        )
+        server = FlexEMRServer(
+            cfg, params, tables, controller=controller,
+            cache_refresh_every=3, pipeline_depth=2, pushdown=pushdown,
+            batcher=BucketBatcher(buckets=(8,), max_wait=0.001),
+        )
+        try:
+            for r in reqs:
+                server.submit(r)
+            outs = []
+            while True:
+                o = server.step()
+                if o is None and server.metrics.requests >= len(reqs):
+                    break
+                if o is not None:
+                    outs.append(o["scores"])
+            eng = server.engine_summary()
+        finally:
+            server.close()
+        return outs, eng
+
+    on, eng_on = serve(True)
+    off, eng_off = serve(False)
+    assert len(on) == len(off) == len(reqs) // 8
+    for a, b in zip(on, off):
+        np.testing.assert_array_equal(a, b)
+    assert eng_on["segment_pushdown"] and eng_on["pooled_segments"] > 0
+    assert eng_off["pooled_segments"] == 0
+    assert eng_on["wire_response_bytes"] < eng_off["wire_response_bytes"]
+
+
+# ------------------------------------------------------- simulator model
+
+
+def test_simulator_compare_pushdown_model():
+    from repro.runtime.simulator import (
+        LookupSimulator,
+        SimConfig,
+        compare_pushdown,
+    )
+
+    out = compare_pushdown(poolable_frac=0.75, rows_per_segment=4.0,
+                           request_bytes_per_subrequest=256.0,
+                           n_batches=150)
+    assert out["byte_reduction"] == pytest.approx(
+        1.0 / (1.0 - 0.75 * (1.0 - 1.0 / 4.0))
+    )
+    assert out["pushdown"]["wire_bytes"] < out["gather"]["wire_bytes"]
+    # request bytes don't shrink: identical in both runs, a growing share
+    assert out["pushdown"]["wire_request_bytes"] == \
+        out["gather"]["wire_request_bytes"] > 0
+    assert out["request_fraction"] > 0
+    with pytest.raises(ValueError):
+        LookupSimulator(SimConfig(poolable_frac=1.5)).run()
+    with pytest.raises(ValueError):
+        LookupSimulator(SimConfig(rows_per_segment=0.5)).run()

@@ -64,6 +64,13 @@ RULES: dict[str, dict[str, tuple[str, float]]] = {
         "byte_reduction_high_skew": ("higher_rel", 0.15),
         "bit_equal": ("equal", 0.0),
     },
+    "pushdown_smoke": {
+        "byte_reduction": ("higher_rel", 0.15),
+        "bit_equal": ("equal", 0.0),
+        # deterministic per seed: the carve must keep finding segments
+        "pooled_segments": ("higher_rel", 0.0),
+        "sim_rel_err": ("lower_abs", 0.05),
+    },
     "obs_smoke": {
         "overhead_frac": ("lower_abs", 0.05),
         "bit_equal": ("equal", 0.0),

@@ -95,7 +95,15 @@ def validate(trace: dict) -> list[str]:
 
 
 def summarize(trace: dict) -> list[dict]:
-    """Per-stage rows: one per (timeline, span name), durations in ms."""
+    """Per-stage rows: one per (timeline, span name), durations in ms.
+
+    Wire-carrying events (WR / range_read spans, wire instants) also report
+    the bytes they moved in each direction: ``resp_bytes`` sums the
+    response payloads (``args.bytes``) and ``req_bytes`` the
+    request-direction payloads — scattered id lists / range descriptors
+    (``args.req_bytes``).  With segment pushdown shrinking responses, the
+    request column is the one to watch for the next wire bottleneck.
+    """
     stages: dict[tuple[int, str], dict] = {}
     for e in trace["traceEvents"]:
         if e.get("ph") not in ("X", "i"):
@@ -104,13 +112,16 @@ def summarize(trace: dict) -> list[dict]:
         s = stages.setdefault(
             key, {"timeline": TIMELINE.get(e["pid"], str(e["pid"])),
                   "stage": e["name"], "count": 0, "total_ms": 0.0,
-                  "max_ms": 0.0},
+                  "max_ms": 0.0, "resp_bytes": 0, "req_bytes": 0},
         )
         s["count"] += 1
         d = e.get("dur", 0.0) / 1e3  # µs -> ms
         s["total_ms"] += d
         if d > s["max_ms"]:
             s["max_ms"] = d
+        a = e.get("args", {})
+        s["resp_bytes"] += int(a.get("bytes", 0) or 0)
+        s["req_bytes"] += int(a.get("req_bytes", 0) or 0)
     rows = sorted(
         stages.values(), key=lambda s: (s["timeline"], -s["total_ms"])
     )
@@ -121,13 +132,16 @@ def summarize(trace: dict) -> list[dict]:
 
 def print_summary(rows: list[dict], file=sys.stdout) -> None:
     hdr = f"{'timeline':9s} {'stage':16s} {'count':>7s} " \
-          f"{'total_ms':>10s} {'mean_ms':>9s} {'max_ms':>9s}"
+          f"{'total_ms':>10s} {'mean_ms':>9s} {'max_ms':>9s} " \
+          f"{'resp_kb':>9s} {'req_kb':>8s}"
     print(hdr, file=file)
     print("-" * len(hdr), file=file)
     for s in rows:
         print(
             f"{s['timeline']:9s} {s['stage']:16s} {s['count']:7d} "
-            f"{s['total_ms']:10.3f} {s['mean_ms']:9.4f} {s['max_ms']:9.3f}",
+            f"{s['total_ms']:10.3f} {s['mean_ms']:9.4f} {s['max_ms']:9.3f} "
+            f"{s.get('resp_bytes', 0) / 1e3:9.1f} "
+            f"{s.get('req_bytes', 0) / 1e3:8.1f}",
             file=file,
         )
 
