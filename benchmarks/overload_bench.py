@@ -1,0 +1,450 @@
+"""Overload bench: deadline admission, retry ladder, brownout — with gates.
+
+The PR-7 loadgen bench established the failure mode: past the saturation
+knee an open-loop arrival process retires *every* request, all of them
+late — goodput collapses while throughput stays pinned.  This bench gates
+the three overload responses layered on top of that harness:
+
+  1. **goodput no-collapse (admission A/B)** — the same 1.4x-capacity
+     Poisson ramp with per-request deadlines, shed-off vs shed-on
+     (:class:`repro.runtime.admission.AdmissionController`).  With
+     admission on, unmeetable requests fast-fail at submit and the
+     survivors retire on time: ``slo.goodput_rps`` must be >= 1.3x the
+     shed-off run's.  The shed-off run is the control — its goodput
+     collapse is the disease being treated.
+  2. **bounded retry amplification (storm + ladder)** — a chaos straggler
+     storm under 1.2x open-loop load with the WR retry/timeout ladder on
+     (``RetryPolicy(budget_frac=0.25)``).  Gates: the ladder actually
+     fires (virtual timeouts re-fly storm-slowed WRs), total charged
+     retries stay within the budget fraction of primary traffic, the
+     chaos firing log is bit-identical across two runs (seeded backoff,
+     admit-count firing), and nothing hangs (all requests retire, no
+     watchdog restores, nothing parked, no leaked engine threads).
+  3. **bit-equality / flag-coverage grid (brownout)** — chaos_bench's
+     deterministic explicit-drive replay with a mid-stream shard drop,
+     swept over pipeline depth {1,2,4} x wire dedup {on,off} x degrade
+     policy {strict, degrade} against a fault-free reference.  ``strict``
+     cells (park-until-restore) must be fully bit-equal with zero
+     degraded flags; ``degrade`` cells (answer cold rows from the cache
+     tier's best partial) may diverge ONLY on requests whose retire
+     carried the ``degraded`` flag — every unflagged request bit-equal.
+
+``run(smoke=True)`` is the CI entry (`benchmarks/run.py --smoke`,
+``python -m benchmarks.overload_bench --smoke``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.pipeline_bench import _build, _request_stream
+
+BATCH = 32
+DEADLINE_S = 0.25  # per-request latency budget for the goodput A/B
+GOODPUT_RATIO_GATE = 1.3  # shed-on goodput >= gate * shed-off goodput
+RETRY_BUDGET_FRAC = 0.25  # storm-run retry budget (fraction of primaries)
+GRID_DEPTHS = (1, 2, 4)
+
+
+def _make_server(cfg, params, tables, timing, registry=None, slo=None,
+                 admission=None, retry_policy=None, chaos=None):
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import BucketBatcher
+    from repro.runtime.serving import FlexEMRServer
+
+    server = FlexEMRServer(
+        cfg, params, tables,
+        num_engines=4, pipeline_depth=2, hedge_timeout=None,
+        track_bytes=False, timing=timing, emulate_wire=True,
+        batcher=BucketBatcher(buckets=(BATCH,), max_wait=0.0005),
+        registry=registry, slo=slo, chaos=chaos,
+        admission=admission, retry_policy=retry_policy,
+    )
+    server._dense(
+        jnp.zeros((BATCH, cfg.num_fields, cfg.embed_dim), np.float32),
+        jnp.zeros((BATCH, cfg.n_dense), np.float32),
+    ).block_until_ready()
+    return server
+
+
+def _capacity(cfg, params, tables, timing, n_batches: int) -> float:
+    """Closed-loop saturated service rate (the 1.x multipliers' base)."""
+    rng = np.random.default_rng(0)
+    reqs = _request_stream(rng, cfg, n_batches, BATCH)
+    server = _make_server(cfg, params, tables, timing)
+    try:
+        for r in reqs:
+            server.submit(r)
+        t0 = time.perf_counter()
+        while server.step() is not None:
+            pass
+        wall = time.perf_counter() - t0
+    finally:
+        server.close()
+    return len(reqs) / wall
+
+
+def _overload_run(cfg, params, tables, timing, qps, horizon, seed,
+                  deadline_s=None, admission=None, retry_policy=None,
+                  chaos=None):
+    """One open-loop run; returns driver stats + summaries for the gates."""
+    from repro.loadgen import (OpenLoopDriver, OpenLoopGenerator,
+                               RecsysPayloadFactory, constant)
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.slo import SloMonitor, SloObjective
+
+    gen = OpenLoopGenerator(
+        constant(qps, horizon),
+        RecsysPayloadFactory(cfg.tables, cfg.n_dense),
+        seed=seed,
+        deadline_s=deadline_s,
+    )
+    events = gen.events()
+    registry = MetricsRegistry()
+    slo = None
+    if deadline_s is not None:
+        slo = SloMonitor(SloObjective(
+            latency_target_s=deadline_s, target=0.99,
+            fast_window_s=0.25, slow_window_s=1.0,
+            burn_threshold=10.0, min_samples=20,
+        ))
+    server = _make_server(
+        cfg, params, tables, timing, registry=registry, slo=slo,
+        admission=admission, retry_policy=retry_policy, chaos=chaos,
+    )
+    try:
+        driver_stats = OpenLoopDriver().run(server, events)
+    finally:
+        server.close()
+    snap = registry.snapshot()
+    return {
+        "events": len(events),
+        "driver": driver_stats,
+        "snapshot": snap,
+        "goodput_rps": snap["slo.goodput_rps"] if slo is not None else 0.0,
+        "admission": None if admission is None else admission.summary(),
+        "retry": server.service.retry_summary(),
+        # engine/chaos summaries read post-close so leaked_threads is final
+        "engine": server.engine_summary(),
+        "chaos": None if chaos is None else chaos.summary(),
+    }
+
+
+def _storm_schedule():
+    """Two straggler storms (latency_mult 8 > the ladder's timeout_mult 4,
+    so every storm-slowed WR is timeout-eligible)."""
+    from repro.chaos import FaultSchedule, FaultSpec
+
+    return FaultSchedule(faults=(
+        FaultSpec("straggler_storm", at_batch=4, target=1,
+                  duration_batches=4, latency_mult=8.0),
+        FaultSpec("straggler_storm", at_batch=12, target=2,
+                  duration_batches=4, latency_mult=8.0),
+    ), seed=0)
+
+
+# ---------------------------------------------------------------- part C grid
+
+
+def _drop_schedule(n_batches: int):
+    from repro.chaos import FaultSchedule, FaultSpec
+
+    return FaultSchedule(faults=(
+        FaultSpec("drop_shard", at_batch=max(2, n_batches // 3), target=0,
+                  duration_batches=2),
+    ), seed=0)
+
+
+def _grid_serve(cfg, params, tables, reqs, batch, depth, dedup, policy,
+                chaos=None):
+    """Deterministic explicit-drive replay (chaos_bench idiom); returns
+    (scores per batch, degraded flags per batch, summaries)."""
+    from repro.core.adaptive_cache import AdaptiveCacheController, MemoryModel
+    from repro.data.pipeline import BucketBatcher
+    from repro.runtime.serving import FlexEMRServer
+
+    controller = AdaptiveCacheController(
+        cfg.tables, cfg.embed_dim,
+        MemoryModel(fixed_bytes=1 << 20, bytes_per_sample=1 << 10,
+                    hbm_bytes=1 << 28),
+        field_replication=False, max_rows=1024,
+    )
+    server = FlexEMRServer(
+        cfg, params, tables, controller=controller,
+        cache_refresh_every=4, pipeline_depth=depth, hedge_timeout=0.05,
+        batcher=BucketBatcher(buckets=(batch,), max_wait=0.005),
+        dedup=dedup, degrade_policy=policy, chaos=chaos,
+    )
+    try:
+        for r in reqs:
+            server.submit(r)
+        outs, flags = [], []
+        while True:
+            while len(server._pipeline) < server.pipeline_depth \
+                    and server._admit_next():
+                pass
+            if not server._pipeline:
+                break
+            out = server._retire_oldest()
+            outs.append(np.asarray(out["scores"]))
+            flags.append(list(out["degraded"]))
+        chaos_summary = None if chaos is None else chaos.summary()
+        degraded = server._degraded_summary()
+        engine = server.engine_summary()
+    finally:
+        server.close()
+    return outs, flags, engine, chaos_summary, degraded
+
+
+def _flatten(outs, flags):
+    """Per-request score stream + flag stream.  Each batch's scores cover
+    the padded bucket; the degraded flag list covers exactly the valid
+    requests, so slicing by it drops the pad rows.  Flattening makes the
+    comparison immune to batch-boundary drift (a wall-clock partial batch
+    shifts every later batch but not the request order)."""
+    scores = np.concatenate(
+        [np.asarray(o)[:len(f)] for o, f in zip(outs, flags)]
+    )
+    return scores, [b for f in flags for b in f]
+
+
+def _cell_verdict(ref_scores, scores, flags):
+    """Per-request comparison of one grid cell against the reference.
+
+    Returns (bit_equal, mismatches, flagged, uncovered): uncovered counts
+    requests whose scores moved WITHOUT the degraded flag — must be zero
+    under every policy."""
+    if ref_scores.shape != scores.shape:
+        return False, -1, -1, -1  # lost/extra requests: hard fail
+    diff = ref_scores != scores
+    per_req = diff if diff.ndim == 1 \
+        else diff.reshape(diff.shape[0], -1).any(axis=1)
+    mismatches = int(per_req.sum())
+    flagged = int(sum(flags))
+    uncovered = int(sum(
+        1 for j in range(len(per_req)) if per_req[j] and not flags[j]
+    ))
+    return mismatches == 0, mismatches, flagged, uncovered
+
+
+def _grid(smoke: bool) -> dict:
+    from benchmarks.chaos_bench import _build as _build_small
+    from benchmarks.chaos_bench import _request_stream as _stream_small
+    from repro.chaos import ChaosInjector
+
+    n_batches = 12 if smoke else 30
+    batch = 16
+    cfg, params, tables = _build_small(0)
+    rng = np.random.default_rng(0)
+    reqs = _stream_small(rng, cfg, n_batches, batch)
+
+    refs = {}
+    for dedup in (True, False):
+        outs, flags, _, _, _ = _grid_serve(
+            cfg, params, tables, reqs, batch, 2, dedup, "strict"
+        )
+        refs[dedup], _ = _flatten(outs, flags)
+
+    cells = []
+    for depth in GRID_DEPTHS:
+        for dedup in (True, False):
+            for policy in ("strict", "degrade"):
+                injector = ChaosInjector(
+                    _drop_schedule(n_batches), watchdog_s=10.0
+                )
+                outs, flags, engine, summ, degraded = _grid_serve(
+                    cfg, params, tables, reqs, batch, depth, dedup, policy,
+                    chaos=injector,
+                )
+                scores, fl = _flatten(outs, flags)
+                bit_equal, mism, flg, uncov = _cell_verdict(
+                    refs[dedup], scores, fl
+                )
+                hangs_ok = (
+                    len(fl) == len(reqs)
+                    and summ["wall"]["forced_restores"] == 0
+                    and engine["parked_now"] == 0
+                    and summ["active_drops"] == []
+                    and engine["leaked_threads"] == 0
+                )
+                cells.append({
+                    "depth": depth, "dedup": dedup, "policy": policy,
+                    "fired": summ["faults_fired"],
+                    "bit_equal": bit_equal,
+                    "mismatched_requests": mism,
+                    "flagged_requests": flg,
+                    "uncovered_mismatches": uncov,
+                    "degraded_rows": degraded["rows"],
+                    "zero_hangs": hangs_ok,
+                })
+
+    strict_cells = [c for c in cells if c["policy"] == "strict"]
+    degrade_cells = [c for c in cells if c["policy"] == "degrade"]
+    strict_ok = all(
+        c["bit_equal"] and c["flagged_requests"] == 0 for c in strict_cells
+    )
+    # Degrade may diverge, but only on flagged requests — and at least one
+    # cell must actually exercise the brownout (flags + partial rows).
+    coverage_ok = all(c["uncovered_mismatches"] == 0 for c in degrade_cells)
+    brownout_exercised = any(
+        c["flagged_requests"] > 0 and c["degraded_rows"] > 0
+        for c in degrade_cells
+    )
+    return {
+        "cells": cells,
+        "grid_cells": len(cells),
+        "grid_faults_fired": min(c["fired"] for c in cells),
+        "grid_strict_bit_equal": bool(strict_ok),
+        "grid_flags_cover_mismatches": bool(coverage_ok),
+        "grid_brownout_exercised": bool(brownout_exercised),
+        "grid_zero_hangs": bool(all(c["zero_hangs"] for c in cells)),
+        "grid_degraded_requests": sum(
+            c["flagged_requests"] for c in degrade_cells
+        ),
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    from repro.chaos import ChaosInjector
+    from repro.rdma.verbs import RetryPolicy
+    from repro.runtime.admission import AdmissionController
+
+    t_start = time.perf_counter()
+    cfg, params, tables, timing = _build(0)
+    horizon = 2.0 if smoke else 4.0
+    cap_batches = 40 if smoke else 120
+    capacity = _capacity(cfg, params, tables, timing, cap_batches)
+    overload_qps = 1.4 * capacity
+
+    # ---- part A: goodput A/B at 1.4x capacity, admission off vs on
+    off = _overload_run(
+        cfg, params, tables, timing, overload_qps, horizon, seed=100,
+        deadline_s=DEADLINE_S,
+    )
+    on = _overload_run(
+        cfg, params, tables, timing, overload_qps, horizon, seed=100,
+        deadline_s=DEADLINE_S, admission=AdmissionController(),
+    )
+    goodput_off = off["goodput_rps"]
+    goodput_on = on["goodput_rps"]
+    goodput_ratio = goodput_on / max(goodput_off, 1e-9)
+    adm = on["admission"]
+
+    # ---- part B: straggler storm at 1.2x with the retry ladder on (twice,
+    # for the firing-log determinism gate)
+    policy = RetryPolicy(budget_frac=RETRY_BUDGET_FRAC, seed=0)
+    storms = []
+    for _ in range(2):
+        storms.append(_overload_run(
+            cfg, params, tables, timing, 1.2 * capacity, horizon, seed=200,
+            retry_policy=policy, chaos=ChaosInjector(_storm_schedule()),
+        ))
+    storm, storm2 = storms
+    retry = storm["retry"]
+    storm_hangs_ok = (
+        storm["driver"]["shed"] == 0
+        and storm["chaos"]["wall"]["forced_restores"] == 0
+        and storm["engine"]["parked_now"] == 0
+        and storm["engine"]["leaked_threads"] == 0
+        and storm["chaos"]["active_drops"] == []
+    )
+    firing_deterministic = (
+        storm["chaos"]["firing_log"] == storm2["chaos"]["firing_log"]
+        and storm["chaos"]["faults_fired"] == len(_storm_schedule().faults)
+    )
+
+    # ---- part C: bit-equality / flag-coverage grid
+    grid = _grid(smoke)
+
+    out = {
+        "us_per_call": 1e6 * (time.perf_counter() - t_start),
+        "capacity_qps": capacity,
+        "deadline_ms": 1e3 * DEADLINE_S,
+        # part A
+        "goodput_off_rps": goodput_off,
+        "goodput_on_rps": goodput_on,
+        "goodput_ratio": goodput_ratio,
+        "shed": adm["shed"],
+        "shed_frac": adm["shed_frac"],
+        "shed_expired": adm["shed_expired"],
+        "shed_queue_full": adm["shed_queue_full"],
+        "shed_deadline": adm["shed_deadline"],
+        "depth_shrinks": adm["depth_shrinks"],
+        "admitted": adm["admitted"],
+        # part B
+        "retry_budget_frac": retry["budget_frac"],
+        "retry_charged": retry["charged"],
+        "retry_denied": retry["denied"],
+        "retry_timeouts": retry["timeouts"],
+        "retry_attempts": retry["attempts"],
+        "retry_amplification": retry["amplification"],
+        "storm_zero_hangs": bool(storm_hangs_ok),
+        "storm_firing_deterministic": bool(firing_deterministic),
+        # part C
+        **{k: v for k, v in grid.items() if k != "cells"},
+        "grid": grid["cells"],
+    }
+    gates = {
+        "goodput_no_collapse": goodput_ratio >= GOODPUT_RATIO_GATE,
+        "admission_sheds": adm["shed"] > 0,
+        "retry_ladder_fires": retry["timeouts"] >= 1,
+        "retry_within_budget":
+            retry["amplification"] <= RETRY_BUDGET_FRAC + 1e-9,
+        "storm_zero_hangs": out["storm_zero_hangs"],
+        "storm_firing_deterministic": out["storm_firing_deterministic"],
+        "grid_strict_bit_equal": out["grid_strict_bit_equal"],
+        "grid_flags_cover_mismatches": out["grid_flags_cover_mismatches"],
+        "grid_brownout_exercised": out["grid_brownout_exercised"],
+        "grid_zero_hangs": out["grid_zero_hangs"],
+    }
+    failed = [k for k, ok in gates.items() if not ok]
+    out["gates_ok"] = not failed
+    out["gates_failed"] = failed
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run with the same gates")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    print(f"capacity: {out['capacity_qps']:.0f} req/s "
+          f"(deadline {out['deadline_ms']:.0f} ms)")
+    print(f"goodput shed-off {out['goodput_off_rps']:.0f} rps, "
+          f"shed-on {out['goodput_on_rps']:.0f} rps "
+          f"({out['goodput_ratio']:.2f}x); shed {out['shed']} "
+          f"({out['shed_frac']:.0%}: expired {out['shed_expired']} "
+          f"queue_full {out['shed_queue_full']} "
+          f"deadline {out['shed_deadline']}), "
+          f"depth_shrinks {out['depth_shrinks']}")
+    print(f"storm: {out['retry_timeouts']} timeouts, "
+          f"{out['retry_attempts']} backoff attempts, "
+          f"{out['retry_charged']}/{out['retry_denied']} charged/denied, "
+          f"amplification {out['retry_amplification']:.3f} "
+          f"(budget {out['retry_budget_frac']:.2f})")
+    print(f"grid: {out['grid_cells']} cells, "
+          f"{out['grid_degraded_requests']} degraded requests flagged")
+    for c in out["grid"]:
+        print(f"  depth={c['depth']} dedup={str(c['dedup']):5s} "
+              f"{c['policy']:7s} fired={c['fired']} "
+              f"mism={c['mismatched_requests']} "
+              f"flagged={c['flagged_requests']} "
+              f"uncovered={c['uncovered_mismatches']}")
+    for k in ("goodput_no_collapse", "admission_sheds", "retry_ladder_fires",
+              "retry_within_budget", "storm_zero_hangs",
+              "storm_firing_deterministic", "grid_strict_bit_equal",
+              "grid_flags_cover_mismatches", "grid_brownout_exercised",
+              "grid_zero_hangs"):
+        ok = k not in out["gates_failed"]
+        print(f"{'PASS' if ok else 'FAIL'}: {k}")
+    return 0 if out["gates_ok"] else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -66,6 +66,7 @@ def main(argv=None) -> None:
         hotcache_bench,
         loadgen_bench,
         obs_bench,
+        overload_bench,
         pipeline_bench,
         prefetch_bench,
         rdma_bench,
@@ -133,6 +134,13 @@ def main(argv=None) -> None:
         f"coverage_err={o['attr_coverage_err']:.2%} "
         f"gates={'ok' if o['gates_ok'] else 'FAILED:' + ','.join(o['gates_failed'])}"
     )
+    overload_derive = lambda o: (  # noqa: E731
+        f"goodput_ratio={o['goodput_ratio']:.2f}x "
+        f"shed={o['shed']} "
+        f"retry_amp={o['retry_amplification']:.3f} "
+        f"degraded={o['grid_degraded_requests']} "
+        f"gates={'ok' if o['gates_ok'] else 'FAILED:' + ','.join(o['gates_failed'])}"
+    )
 
     if opts.smoke:
         bench(
@@ -181,6 +189,11 @@ def main(argv=None) -> None:
             "chaos_smoke",
             lambda: chaos_bench.run(smoke=True),
             chaos_derive,
+        )
+        bench(
+            "overload_smoke",
+            lambda: overload_bench.run(smoke=True),
+            overload_derive,
         )
         write_json()
         failed = [r for r in rows if r[2] == "FAILED"]
@@ -244,6 +257,11 @@ def main(argv=None) -> None:
     bench("obs", obs_bench.run, obs_derive)
     bench("loadgen", lambda: loadgen_bench.run(smoke=False), loadgen_derive)
     bench("chaos", lambda: chaos_bench.run(smoke=False), chaos_derive)
+    bench(
+        "overload",
+        lambda: overload_bench.run(smoke=False),
+        overload_derive,
+    )
 
     print()
     try:

@@ -20,6 +20,14 @@ dense ranker.
       --arrival poisson --qps 2000 --duration 5  # open-loop load: seeded
       # Poisson arrivals at the offered rate (queueing delay measured, not
       # hidden); prints the slo.* summary (burn rates, goodput) at exit
+  PYTHONPATH=src python examples/serve_dlrm.py \
+      --arrival poisson --qps 4000 --duration 5 --deadline-ms 50 \
+      --admission --retry-budget 0.1 --degrade-policy degrade
+      # overload response: deadline admission sheds unmeetable requests at
+      # the door (serve.admission.* in the exit summary), the retry ladder
+      # re-flies flaky/storm-slowed WRs under a bounded budget
+      # (rdma.retry.*), and dropped-shard cold rows answer as flagged
+      # brownout partials instead of parking (serve.degraded.*)
 """
 import os
 import sys

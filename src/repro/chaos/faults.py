@@ -160,6 +160,7 @@ class DegradedShard:
         self._restored = False
         self.served_rows = 0  # hot rows served from the replica while down
         self.refused = 0  # lookups refused for cold rows while down
+        self.degraded_rows = 0  # cold rows answered with zeros (brownout)
 
     @property
     def replica_rows(self) -> int:
@@ -181,6 +182,36 @@ class DegradedShard:
             idx[k] = j
         self.served_rows += len(row_ids)
         return self._rows[idx]
+
+    def gather_partial(
+        self, row_ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Brownout gather: ``(rows, present)`` with zero rows for cold ids.
+
+        The ``degrade`` policy's data path (``RdmaEnginePool``): replica
+        rows are served bit-identically, truly absent rows come back as
+        zero vectors with ``present=False`` so the engine can flag the
+        affected bags instead of parking the WR.  After restore everything
+        forwards to the real shard (all present).
+        """
+        row_ids = np.asarray(row_ids)
+        if self._restored:
+            return (
+                self.real.lookup_rows(row_ids),
+                np.ones(len(row_ids), bool),
+            )
+        rows = np.zeros((len(row_ids), self._rows.shape[1]),
+                        self._rows.dtype)
+        present = np.zeros(len(row_ids), bool)
+        for k, rid in enumerate(row_ids):
+            j = self._index.get(int(rid))
+            if j is not None:
+                rows[k] = self._rows[j]
+                present[k] = True
+        n_hit = int(present.sum())
+        self.served_rows += n_hit
+        self.degraded_rows += len(row_ids) - n_hit
+        return rows, present
 
     # -- EmbeddingServer surface ------------------------------------------
 

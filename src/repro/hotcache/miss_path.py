@@ -302,6 +302,23 @@ class PendingTieredLookup:
         """Duplicate subrequests the miss handle's straggler hedge issued."""
         return 0 if self._remote is None else getattr(self._remote, "hedged", 0)
 
+    @property
+    def degraded_bags(self) -> set:
+        """Flat bag ids [0, B*F) answered as brownout partials (degrade
+        policy under a dropped shard) — empty unless ``wait`` has run and
+        the miss path actually degraded.  Cache-hit sums are never
+        degraded: only the remote handle contributes."""
+        if self._remote is None:
+            return set()
+        return getattr(self._remote, "degraded_bags", set())
+
+    @property
+    def degraded_rows(self) -> int:
+        """Dropped-shard cold rows answered as zero vectors for this batch."""
+        if self._remote is None:
+            return 0
+        return getattr(self._remote, "degraded_rows", 0)
+
     def wait(self, timeout: float | None = None) -> np.ndarray:
         if self._out is not None:
             return self._out

@@ -56,6 +56,7 @@ from repro.loadgen import (
 from repro.loadgen import trace as qps_schedule_trace
 from repro.models import recsys as R
 from repro.obs import SloMonitor, SloObjective, Tracer, get_registry
+from repro.runtime.admission import AdmissionController
 from repro.runtime.serving import FlexEMRServer
 from repro.utils import logger
 
@@ -140,17 +141,32 @@ def run(args) -> dict:
         latency_target_s=1e-3 * args.slo_target_ms,
     ))
     chaos = _build_chaos(args, tables, tracer)
+    admission = (
+        AdmissionController(max_queue=args.admission_queue)
+        if getattr(args, "admission", False) else None
+    )
+    retry_policy = None
+    if getattr(args, "retry_budget", None) is not None:
+        from repro.rdma.verbs import RetryPolicy
+
+        retry_policy = RetryPolicy(
+            budget_frac=args.retry_budget, seed=args.seed
+        )
     server = FlexEMRServer(
         cfg, params, tables, controller=controller,
         num_engines=args.num_engines, pushdown=not args.no_pushdown,
         engine=args.engine, pipeline_depth=args.pipeline_depth,
         dedup=not args.no_dedup,
         tracer=tracer, registry=registry, slo=slo, chaos=chaos,
+        admission=admission, retry_policy=retry_policy,
+        degrade_policy=getattr(args, "degrade_policy", "strict"),
     )
     deadline_s = (
         1e-3 * args.deadline_ms if args.deadline_ms is not None else None
     )
     try:
+        from repro.runtime.admission import ShedError
+
         t0 = time.time()
         if args.arrival == "closed":
             sizes = syn.diurnal_batches(
@@ -166,14 +182,17 @@ def run(args) -> dict:
                     b = syn.recsys_batch(
                         rng, cfg.tables, 1, n_dense=cfg.n_dense
                     )
-                    server.submit(
-                        {
-                            "indices": b["indices"][0],
-                            "mask": b["mask"][0],
-                            "dense": b["dense"][0],
-                        },
-                        deadline_s=deadline_s,
-                    )
+                    try:
+                        server.submit(
+                            {
+                                "indices": b["indices"][0],
+                                "mask": b["mask"][0],
+                                "dense": b["dense"][0],
+                            },
+                            deadline_s=deadline_s,
+                        )
+                    except ShedError:
+                        continue  # counted under serve.admission.*
                     submitted += 1
                 while server.step() is not None:
                     pass
@@ -213,6 +232,13 @@ def run(args) -> dict:
         out["slo"] = slo.summary()
         if chaos is not None:
             out["chaos"] = chaos.summary()
+        # Overload response: what was shed at the door, what retired as a
+        # brownout partial, and what the retry ladder spent.
+        if admission is not None:
+            out["admission"] = server._admission_summary()
+        out["degraded"] = server._degraded_summary()
+        if retry_policy is not None:
+            out["retry"] = server.service.retry_summary()
         eng = server.engine_summary()
         if eng is not None:
             out["rdma_engine"] = eng
@@ -310,6 +336,25 @@ def main():
                     help="live-reshard the embedding tier to N shards "
                     "mid-run (quiesce-free, under traffic); composes "
                     "with --chaos-seed")
+    ap.add_argument("--admission", action="store_true",
+                    help="deadline-aware admission control: shed requests "
+                    "whose deadline is expired or unmeetable, bound the "
+                    "submit queue, and adapt the pipeline depth under "
+                    "sustained SLO alerts (serve.admission.* at exit)")
+    ap.add_argument("--admission-queue", type=int, default=256,
+                    help="bounded submit-queue size for --admission")
+    ap.add_argument("--retry-budget", type=float, default=None,
+                    metavar="FRAC",
+                    help="arm the per-WR retry/timeout/backoff ladder with "
+                    "this retry budget (fraction of primary WRs; hedges "
+                    "charge it too).  Bit-equal to off when no fault "
+                    "fires.  Pooled engine only")
+    ap.add_argument("--degrade-policy", default="strict",
+                    choices=("strict", "degrade", "block"),
+                    help="dropped-shard cold-row policy: strict parks "
+                    "until restore (default), degrade answers the cache "
+                    "tier's best partial and flags the request, block "
+                    "fails fast.  Pooled engine only")
     args = ap.parse_args()
     run(args)
 

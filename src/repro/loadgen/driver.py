@@ -25,6 +25,7 @@ import time
 import numpy as np
 
 from repro.loadgen.arrivals import ArrivalEvent
+from repro.runtime.admission import ShedError
 
 
 class OpenLoopDriver:
@@ -52,21 +53,29 @@ class OpenLoopDriver:
         done_before = server.metrics.requests
         lag_max = 0.0
         lag_sum = 0.0
+        shed = 0
         epoch = time.perf_counter()
         i = 0
         steps = 0
-        while i < n or server.metrics.requests - done_before < n:
+        while i < n or server.metrics.requests - done_before < n - shed:
             now = time.perf_counter() - epoch
             while i < n and events[i].t <= now:
                 ev = events[i]
                 lag = now - ev.t
                 lag_sum += lag
                 lag_max = max(lag_max, lag)
-                server.submit(
-                    ev.payload,
-                    arrival=epoch + ev.t,
-                    deadline_s=ev.deadline_s,
-                )
+                try:
+                    server.submit(
+                        ev.payload,
+                        arrival=epoch + ev.t,
+                        deadline_s=ev.deadline_s,
+                    )
+                except ShedError:
+                    # Overload shed (admission control): the request never
+                    # enters the pipeline, so it will never retire — drop
+                    # it from the completion target.  The server's
+                    # serve.admission.* counters record the reason.
+                    shed += 1
                 i += 1
             out = server.step()
             steps += 1
@@ -79,6 +88,7 @@ class OpenLoopDriver:
         wall = time.perf_counter() - epoch
         return {
             "submitted": n,
+            "shed": shed,
             "wall_s": wall,
             "offered_qps": n / max(events[-1].t, 1e-9) if n else 0.0,
             "achieved_qps": n / max(wall, 1e-9),

@@ -48,6 +48,8 @@ CAT_HEDGE = "hedge"  # hedge arm / win / cancel
 CAT_PREFETCH = "prefetch"  # piggybacked speculative fetches
 CAT_SLO = "slo"  # burn-rate alert fire/resolve instants, attribution marks
 CAT_CHAOS = "chaos"  # fault injection: kill/drop/storm/reshard + recovery
+CAT_ADMISSION = "admission"  # shed / adaptive-depth decisions at submit
+CAT_RETRY = "retry"  # per-WR backoff retries + virtual-timeout re-flights
 
 # The wall-clock serving thread's Perfetto thread row.
 TID_RANKER = 0

@@ -59,6 +59,7 @@ from repro.core.flow_control import CreditGate
 from repro.core.lookup_engine import ShardUnavailableError
 from repro.obs.trace import (
     CAT_HEDGE,
+    CAT_RETRY,
     CAT_WIRE,
     NULL_TRACER,
     PID_VIRTUAL,
@@ -67,12 +68,28 @@ from repro.obs.trace import (
 )
 from repro.rdma.verbs import (
     LookupSubrequest,
+    RetryPolicy,
     SchedulePlan,
+    TransientWireError,
     VerbsState,
     VerbsTiming,
     heat_affinity,
     plan_schedule,
 )
+from repro.utils import logger
+
+# Brownout policies for dropped-shard cold rows (repro.chaos composition):
+#   strict   park the WR until the shard restores — strictly correct
+#            answers, possibly late (the PR-8 never-wrong-never-hung
+#            default).
+#   degrade  answer from the degraded stand-in's best partial — replica
+#            rows bit-identically, truly absent rows as zero vectors —
+#            and flag the affected bags (never-wrong-never-LATE: the
+#            request retires on time, marked degraded).
+#   block    refuse: settle the WR with the outage error after one
+#            restore-race retry, so the batch fails fast instead of
+#            waiting out the outage.
+DEGRADE_POLICIES = ("strict", "degrade", "block")
 
 
 class BatchHandle:
@@ -89,6 +106,15 @@ class BatchHandle:
         self.v_end = v_end  # absolute virtual completion (frontier sync)
         self.error: Exception | None = None  # first per-WR failure
         self.wrs: list[LookupSubrequest] = []  # originals, for hedging
+        # Brownout accounting (degrade policy): flat bag ids whose sums are
+        # missing dropped-shard cold rows, the count of those rows, and —
+        # for dedup WRs whose unique rows may be borrowed by a coalesced
+        # in-flight twin — the missing positions within each slot's result.
+        # All written inside _settle under _lock, so a waiter woken by the
+        # final settle always sees the complete degraded record.
+        self.degraded_rows = 0
+        self.degraded_bags: set[int] = set()
+        self._degraded_idx: dict[int, np.ndarray] = {}
         self._settled = bytearray(n)
         self._remaining = n
         self._lock = threading.Lock()
@@ -101,9 +127,13 @@ class BatchHandle:
         hedge loser can only over-execute, never corrupt."""
         return bool(self._settled[slot])
 
-    def _settle(self, slot: int, result=None, error: Exception | None = None
-                ) -> bool:
-        """First completion of ``slot`` wins; returns False for the loser."""
+    def _settle(self, slot: int, result=None, error: Exception | None = None,
+                degraded=None) -> bool:
+        """First completion of ``slot`` wins; returns False for the loser.
+
+        ``degraded`` is a ``(bags, n_missing, missing_positions)`` record
+        from a brownout partial (degrade policy): applied only on the win,
+        under the same lock the waiter reads through."""
         with self._lock:
             if self._settled[slot]:
                 return False
@@ -113,10 +143,24 @@ class BatchHandle:
                     self.error = error
             else:
                 self.results[slot] = result
+                if degraded is not None:
+                    bags, n_missing, missing = degraded
+                    self.degraded_bags.update(bags)
+                    self.degraded_rows += n_missing
+                    if len(missing):
+                        self._degraded_idx[slot] = missing
             self._remaining -= 1
             if self._remaining == 0:
                 self._done.set()
             return True
+
+    def degraded_rows_at(self, slot: int) -> np.ndarray | None:
+        """Missing-row positions within ``results[slot]`` if that slot
+        settled as a brownout partial, else None (borrow-chain flagging:
+        a borrower scattering a donor's zero-filled row must inherit the
+        degraded mark)."""
+        with self._lock:
+            return self._degraded_idx.get(slot)
 
     def unsettled(self) -> list[int]:
         with self._lock:
@@ -225,33 +269,111 @@ class _EngineThread(threading.Thread):
                       "dup": wr.hedge_dup},
             )
 
+    def _degrade_partial(self, wr: LookupSubrequest, srv):
+        """Brownout (degrade policy) answer for a dropped shard's WR.
+
+        Re-gathers through the stand-in's ``gather_partial`` — replica rows
+        bit-identical, truly absent rows as zero vectors — and shapes the
+        per-protocol result exactly as the healthy path would, so present
+        contributions merge bit-equal.  Returns ``(result, degraded_record)``
+        with the affected flat bag ids, or None when the server has no
+        partial surface (caller falls back to strict parking).
+        """
+        gather = getattr(srv, "gather_partial", None)
+        if gather is None:
+            return None
+        rows, present = gather(wr.row_ids)
+        missing = np.flatnonzero(~present)
+        if len(missing) == 0:
+            # Restored between the raise and this re-gather: whole answer.
+            missing = missing[:0]
+        if wr.dedup:
+            res = rows
+            if wr.gather_idx is not None and wr.bag_ids is not None:
+                bags = wr.bag_ids[np.isin(wr.gather_idx, missing)]
+            else:
+                bags = missing[:0]
+        elif wr.seg_bounds is not None:
+            S = len(wr.seg_bounds) - 1
+            seg_of = np.repeat(np.arange(S), np.diff(wr.seg_bounds))
+            out = np.zeros((S, rows.shape[1]), np.float64)
+            np.add.at(out, seg_of, rows)
+            res = out
+            bags = wr.bag_ids[np.unique(seg_of[missing])]
+        elif wr.pushdown:
+            out = np.zeros((wr.num_bags, rows.shape[1]), np.float64)
+            np.add.at(out, wr.bag_ids, rows)
+            res = out
+            bags = wr.bag_ids[missing]
+        else:
+            res = (rows, wr.bag_ids)
+            bags = wr.bag_ids[missing]
+        record = None
+        if len(missing):
+            record = (
+                tuple(int(b) for b in np.unique(np.asarray(bags))),
+                int(len(missing)),
+                missing,
+            )
+        return res, record
+
     def _execute(self, wr: LookupSubrequest, handle: BatchHandle) -> None:
         if handle.settled(wr.slot):
             self._cancel(wr)  # hedge already lost: skip the gather
             return
-        if self.pool.emulate_wire:
+        pool = self.pool
+        if pool.emulate_wire:
             # Hold the WR for its wire + server time as a real (GIL-free)
             # wall-clock wait — the engine thread behaves like one blocked
             # on an RNIC completion, so cross-batch pipelining effects are
             # measurable end to end on a machine with no RNIC (and too few
             # cores for CPU-side overlap to stand in for wire latency).
             # A straggler-storm WR (latency_mult > 1) flies slower.
-            t = self.pool.timing
-            time.sleep(
-                (
-                    t.t_server
-                    + wr.request_bytes / t.req_wire_bps
-                    + wr.response_bytes / t.wire_bps
-                )
-                * wr.latency_mult
+            t = pool.timing
+            span = (
+                t.t_server
+                + wr.request_bytes / t.req_wire_bps
+                + wr.response_bytes / t.wire_bps
             )
+            policy = pool.retry_policy
+            if (
+                policy is not None
+                and wr.latency_mult > policy.timeout_mult
+                and not wr.hedge_dup
+                and pool._charge_retry(1)
+            ):
+                # Per-WR timeout on the virtual clock: a storm-slowed
+                # flight that would exceed timeout_mult healthy spans is
+                # abandoned at the timeout and re-flown on the healthy
+                # path — charged to the retry budget so a storm cannot
+                # amplify itself.  No fault -> latency_mult == 1 -> this
+                # rung never fires and the sleep below is bit-identical
+                # to the no-policy path.
+                with pool._retry_lock:
+                    pool.retry_timeouts += 1
+                time.sleep(policy.timeout_mult * span)
+                tracer = pool.tracer
+                if tracer.enabled:
+                    tracer.instant(
+                        "retry_timeout", CAT_RETRY, tracer.now(),
+                        pid=PID_WALL, tid=100 + self.tid,
+                        args={"slot": wr.slot, "server": wr.server,
+                              "latency_mult": wr.latency_mult},
+                    )
+                if handle.settled(wr.slot):
+                    self._cancel(wr)  # the twin landed during the timeout
+                    return
+                time.sleep(span)  # the re-flight flies healthy
+            else:
+                time.sleep(span * wr.latency_mult)
             if handle.settled(wr.slot):
                 self._cancel(wr)  # the twin landed while we "flew"
                 return
-        attempts = 0
+        attempts = 1  # tries of the WR so far, this flight included
+        park_attempts = 0
         while True:
             try:
-                srv = self.pool._resolve_server(wr)
+                srv = pool._resolve_server(wr)
                 if wr.dedup:
                     # Unique-row wire protocol (§3.1.1): the server ships
                     # each row once; the ranker scatters via wr.gather_idx.
@@ -274,16 +396,72 @@ class _EngineThread(threading.Thread):
                 else:
                     res = (srv.lookup_rows(wr.row_ids), wr.bag_ids)
             except ShardUnavailableError as exc:
-                # Dropped shard, cold row: park until the shard is restored
-                # (the batch resolves late, never wrong).  _park re-checks
-                # the dropped mark under the pool lock — if the shard was
-                # restored between the raise and the park, retry once
-                # against the (now-forwarding) server; a shard that raises
-                # while NOT marked dropped fails fast instead.
-                if self.pool._park(wr, handle):
+                # Dropped shard, cold row — the brownout policy decides:
+                #   degrade  settle now with the stand-in's best partial
+                #            (zero rows for the truly absent) and flag the
+                #            affected bags — on time, marked degraded.
+                #   strict   park until the shard restores (the PR-8
+                #            default: resolves late, never wrong).
+                #   block    no park: fail the batch fast with the outage.
+                # _park re-checks the dropped mark under the pool lock — if
+                # the shard was restored between the raise and the park,
+                # retry once against the (now-forwarding) server; a shard
+                # that raises while NOT marked dropped fails fast.
+                dpolicy = pool.degrade_policy_for(wr.server)
+                if dpolicy == "degrade":
+                    partial = self._degrade_partial(wr, srv)
+                    if partial is not None:
+                        res, record = partial
+                        if record is not None:
+                            with pool._retry_lock:
+                                pool.degraded_wrs += 1
+                                pool.degraded_rows += record[1]
+                        if not handle._settle(
+                            wr.slot, result=res, degraded=record
+                        ):
+                            self._cancel(wr)
+                            return
+                        break
+                    # No partial surface on this stand-in: strict fallback.
+                    dpolicy = "strict"
+                if dpolicy == "strict" and pool._park(wr, handle):
                     return
-                attempts += 1
-                if attempts < 2:
+                park_attempts += 1
+                if park_attempts < 2:
+                    continue
+                if not handle._settle(wr.slot, error=exc):
+                    self._cancel(wr)
+                    return
+            except TransientWireError as exc:
+                # Flaky completion: seeded-deterministic exponential backoff
+                # with jitter, bounded by max_attempts AND the shared retry
+                # budget.  Budget exhausted or attempts spent -> the error
+                # settles (fail loudly); no fault -> this rung never runs.
+                policy = pool.retry_policy
+                if (
+                    policy is not None
+                    and attempts < policy.max_attempts
+                    and pool._charge_retry(1)
+                ):
+                    delay = policy.backoff_delay_s(
+                        wr.server, wr.slot, attempts
+                    )
+                    attempts += 1
+                    with pool._retry_lock:
+                        pool.retry_attempts += 1
+                    tracer = pool.tracer
+                    if tracer.enabled:
+                        tracer.instant(
+                            "retry_backoff", CAT_RETRY, tracer.now(),
+                            pid=PID_WALL, tid=100 + self.tid,
+                            args={"slot": wr.slot, "server": wr.server,
+                                  "attempt": attempts,
+                                  "delay_us": delay * 1e6},
+                        )
+                    time.sleep(delay)
+                    if handle.settled(wr.slot):
+                        self._cancel(wr)  # twin won during the backoff
+                        return
                     continue
                 if not handle._settle(wr.slot, error=exc):
                     self._cancel(wr)
@@ -324,9 +502,16 @@ class RdmaEnginePool:
         gate: CreditGate | None = None,
         emulate_wire: bool = False,
         tracer=None,  # repro.obs.Tracer | None (NULL_TRACER: one branch off)
+        retry_policy: RetryPolicy | None = None,
+        degrade_policy: str = "strict",
     ):
         if num_threads <= 0:
             raise ValueError("num_threads must be positive")
+        if degrade_policy not in DEGRADE_POLICIES:
+            raise ValueError(
+                f"degrade_policy must be one of {DEGRADE_POLICIES}, "
+                f"got {degrade_policy!r}"
+            )
         self.servers = list(servers)
         self.num_threads = num_threads
         self.timing = timing or VerbsTiming()
@@ -365,6 +550,22 @@ class RdmaEnginePool:
         self.wrs_redealt = 0  # queued WRs re-dealt off dead threads
         self.wrs_parked = 0  # WRs parked on a dropped shard
         self.parked_released = 0  # parked WRs re-dispatched at restore
+        # ---- overload response (retry ladder + brownout) --------------
+        # Retry budget state is guarded by its own leaf lock (_retry_lock):
+        # engine threads charge it mid-execute, hedge() charges it under
+        # _cond, so it must never acquire _cond itself.
+        self.retry_policy = retry_policy
+        self.degrade_policy = degrade_policy
+        self._degrade_policies: dict[int, str] = {}  # per-server overrides
+        self._retry_lock = threading.Lock()
+        self.retry_charged = 0  # budget units consumed (retries + hedges)
+        self.retry_denied = 0  # re-issues refused by an exhausted budget
+        self.retry_attempts = 0  # backoff retries actually flown
+        self.retry_timeouts = 0  # virtual-timeout re-flights
+        self.hedges_charged = 0  # hedge duplicates debited from the budget
+        self.degraded_wrs = 0  # WRs settled as brownout partials
+        self.degraded_rows = 0  # cold rows answered as zeros across them
+        self.leaked_threads = 0  # workers that outlived close()'s join
         # Virtual-layer accounting (deterministic, from plan_schedule).
         # Latencies keep a bounded recent window so a long-running server
         # neither grows without bound nor reports lifetime-global p99s.
@@ -509,6 +710,15 @@ class RdmaEnginePool:
             for wr in handle.wrs:
                 if handle.settled(wr.slot):
                     continue
+                if self.retry_policy is not None:
+                    # Hedges are re-issued work like any retry: they charge
+                    # the same budget, so hedging cannot amplify an
+                    # overload past budget_frac of primary traffic.  No
+                    # policy (the default) keeps the PR-6 unbounded hedge.
+                    if not self._charge_retry(1):
+                        continue
+                    with self._retry_lock:
+                        self.hedges_charged += 1
                 owner = wr.engine if 0 <= wr.engine < self.num_threads \
                     else wr.server % self.num_threads
                 others = [t for t in alive if t.tid != owner]
@@ -536,6 +746,67 @@ class RdmaEnginePool:
                 self.hedged += n
                 self._cond.notify_all()
         return n
+
+# ------------------------------------------ retry budget & brownout policy
+
+    def _charge_retry(self, n: int = 1) -> bool:
+        """Debit the shared retry budget (retries, timeouts, hedges alike).
+
+        The budget is ``budget_frac`` of primary WRs submitted so far — a
+        bounded fraction of primary traffic, so recovery work can never
+        amplify an overload.  Returns False when exhausted: the caller
+        falls back to the non-retry path (fly slow / settle the error /
+        skip the hedge) and the denial is counted."""
+        policy = self.retry_policy
+        if policy is None:
+            return True
+        with self._retry_lock:
+            budget = int(policy.budget_frac * self.subrequests)
+            if self.retry_charged + n > budget:
+                self.retry_denied += n
+                return False
+            self.retry_charged += n
+            return True
+
+    def degrade_policy_for(self, server: int) -> str:
+        """The brownout policy a dropped ``server``'s cold rows get (the
+        per-server override if one is set, else the pool default)."""
+        return self._degrade_policies.get(server, self.degrade_policy)
+
+    def set_degrade_policy(self, policy: str, server: int | None = None
+                           ) -> None:
+        """Set the brownout policy — pool-wide, or for one server."""
+        if policy not in DEGRADE_POLICIES:
+            raise ValueError(
+                f"degrade_policy must be one of {DEGRADE_POLICIES}, "
+                f"got {policy!r}"
+            )
+        with self._cond:
+            if server is None:
+                self.degrade_policy = policy
+            else:
+                self._degrade_policies[int(server)] = policy
+
+    def retry_summary(self) -> dict:
+        """Retry-ladder counters (the ``rdma.retry.*`` namespace)."""
+        policy = self.retry_policy
+        with self._retry_lock:
+            return {
+                "enabled": policy is not None,
+                "budget_frac": policy.budget_frac if policy else 0.0,
+                "budget": (
+                    int(policy.budget_frac * self.subrequests)
+                    if policy else 0
+                ),
+                "charged": self.retry_charged,
+                "denied": self.retry_denied,
+                "attempts": self.retry_attempts,
+                "timeouts": self.retry_timeouts,
+                "hedges_charged": self.hedges_charged,
+                "amplification": (
+                    self.retry_charged / max(1, self.subrequests)
+                ),
+            }
 
 # ------------------------------------------------- faults & elasticity
 
@@ -725,6 +996,11 @@ class RdmaEnginePool:
                 "parked_now": sum(len(v) for v in self._parked.values()),
                 "parked_released": self.parked_released,
                 "dropped_shards": sorted(self._parked),
+                # Overload response (retry ladder + brownout):
+                "degraded_wrs": self.degraded_wrs,
+                "degraded_rows": self.degraded_rows,
+                "degrade_policy": self.degrade_policy,
+                "leaked_threads": self.leaked_threads,
             }
 
     # ------------------------------------------------------------------ close
@@ -752,5 +1028,17 @@ class RdmaEnginePool:
             self._parked.clear()
             self._degraded.clear()
             self._cond.notify_all()
+        leaked = 0
         for t in self.threads:
             t.join(timeout=5.0)
+            if t.is_alive():
+                # The zero-hang ladder (settle-on-close above + chaos
+                # watchdog) should make this unreachable; if a worker
+                # outlives the join anyway, make the leak visible instead
+                # of silently abandoning a daemon thread.
+                leaked += 1
+                logger.warning(
+                    "rdma engine thread %s leaked: still alive 5.0s "
+                    "after close()", t.name,
+                )
+        self.leaked_threads = leaked

@@ -120,6 +120,12 @@ class LookupHandle:
         self.hedged = 0  # duplicate WRs this handle re-issued
         self._hedge_armed = False  # a wait() retry must not re-duplicate
         self._out: np.ndarray | None = None
+        # Brownout (degrade policy): flat bag ids [0, B*F) whose sums are
+        # missing dropped-shard cold rows, and how many such rows — from
+        # this handle's own WRs AND from borrowed donor slots that settled
+        # as partials.  Populated by wait().
+        self.degraded_bags: set[int] = set()
+        self.degraded_rows = 0
         # Always-recorded merge work (scatter + finalize, excluding the
         # blocking wait for the engine): the serving loop's serve.attr.*
         # decomposition splits its lookup stall into wire vs merge with it.
@@ -222,6 +228,11 @@ class LookupHandle:
                 else:
                     rows, bags = res  # ranker-side pooling (fig 4a)
                     np.add.at(out, bags, rows)
+            if bh.degraded_rows:
+                # Brownout partials (degrade policy): the batch is fully
+                # settled here, so the record is complete — no lock needed.
+                self.degraded_bags |= bh.degraded_bags
+                self.degraded_rows += bh.degraded_rows
         for donor, slot, d_idx, bags, _fids in self._borrows:
             # Borrowed rows: scatter from the donor batch's settled slot.
             # The donor resolves on its own engine threads regardless of
@@ -235,6 +246,16 @@ class LookupHandle:
                     "coalesced donor subrequest failed"
                 )
             np.add.at(out, bags, np.asarray(rows)[d_idx])
+            missing = donor.degraded_rows_at(slot)
+            if missing is not None:
+                # The donor slot settled as a brownout partial: any of its
+                # zero-filled rows we just scattered degrade OUR bags too.
+                hit = np.isin(np.asarray(d_idx), missing)
+                if hit.any():
+                    self.degraded_bags.update(
+                        int(b) for b in np.asarray(bags)[hit]
+                    )
+                    self.degraded_rows += int(hit.sum())
         # A handle that posted nothing of its own (every row borrowed)
         # still owns table entries via borrow re-registration: purge them
         # now that it is retiring.  Idempotent after the finally above.
@@ -278,6 +299,8 @@ class PooledLookupService(HostLookupService):
         pushdown_segments: bool = False,
         pushdown_min_rows: int = 2,
         tracer=None,
+        retry_policy=None,  # verbs.RetryPolicy | None (None: no ladder)
+        degrade_policy: str = "strict",
     ):
         self._init_core(tables, table_array, pushdown, dedup=dedup)
         self.tracer = NULL_TRACER if tracer is None else tracer
@@ -332,6 +355,8 @@ class PooledLookupService(HostLookupService):
             gate=gate,
             emulate_wire=emulate_wire,
             tracer=self.tracer,
+            retry_policy=retry_policy,
+            degrade_policy=degrade_policy,
         )
 
     # ----------------------------------------------------------------- lookup
@@ -925,6 +950,10 @@ class PooledLookupService(HostLookupService):
         """Per-batch virtual lookup latencies (seconds, bounded recent
         window), from the verbs timing model."""
         return self.pool.virtual_latencies
+
+    def retry_summary(self) -> dict:
+        """Retry-ladder counters (``rdma.retry.*``), from the engine pool."""
+        return self.pool.retry_summary()
 
     def engine_summary(self) -> dict:
         s = self.pool.summary()

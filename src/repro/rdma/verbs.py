@@ -78,6 +78,73 @@ import heapq
 import numpy as np
 
 
+class TransientWireError(RuntimeError):
+    """A WR completion error worth retrying (flaky link, CQE flush, RNR).
+
+    The engine's retry ladder (``RetryPolicy``) re-posts a WR that raised
+    this, after a seeded-deterministic exponential backoff, up to the
+    attempt cap and the pool-wide retry budget.  Anything else a server
+    raises is treated as a hard failure and settles the slot immediately —
+    retrying a deterministic bug only burns budget.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/timeout/backoff ladder for work requests (overload-safe).
+
+    Three rungs, all deterministic given the same fault sequence:
+
+      * **Backoff retry**: a WR that raises :class:`TransientWireError` is
+        re-posted up to ``max_attempts`` total tries, sleeping
+        ``backoff_base_s * backoff_mult**(attempt-1)`` plus seeded jitter
+        between tries.  The jitter is a pure function of ``(seed, server,
+        slot, attempt)`` — never wall clock — so a replayed fault sequence
+        backs off identically run after run.
+      * **Per-WR virtual timeout**: a WR whose priced flight time exceeds
+        ``timeout_mult`` times its healthy (``latency_mult == 1``) span —
+        i.e. a straggler-storm victim — is abandoned at the timeout mark on
+        the emulated wire and re-flown once on the healthy path.  The wall
+        watchdog for genuinely hung shards stays with the chaos layer's
+        stall probe (``ChaosInjector.guarded_wait``).
+      * **Retry budget**: retries, timeout re-flights, AND straggler
+        hedges are charged against one pool-wide budget of
+        ``budget_frac * primary subrequests``.  A charge that would exceed
+        the budget is denied (the WR fails or flies the slow path instead),
+        so mitigation traffic can never amplify an overload past the
+        configured fraction.
+
+    Bit-equality contract: with no fault fired, no rung triggers — every
+    retry path re-executes the identical gather, so outputs are bit-equal
+    with the policy on or off regardless.
+    """
+
+    max_attempts: int = 3  # total tries per WR (1 = no retry)
+    backoff_base_s: float = 1e-4
+    backoff_mult: float = 2.0
+    jitter: float = 0.5  # fraction of the backoff randomized (seeded)
+    budget_frac: float = 0.1  # (retries + hedges) / primary WRs cap
+    timeout_mult: float = 4.0  # virtual timeout = mult * healthy WR span
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.budget_frac < 0.0:
+            raise ValueError("budget_frac must be >= 0")
+        if self.timeout_mult <= 1.0:
+            raise ValueError("timeout_mult must be > 1")
+
+    def backoff_delay_s(self, server: int, slot: int, attempt: int) -> float:
+        """Deterministic backoff before try ``attempt + 1`` (attempt >= 1)."""
+        base = self.backoff_base_s * self.backoff_mult ** (attempt - 1)
+        r = np.random.default_rng(
+            (self.seed, int(server) & 0x7FFFFFFF, int(slot) & 0x7FFFFFFF,
+             attempt)
+        ).random()
+        return base * (1.0 + self.jitter * r)
+
+
 @dataclasses.dataclass(frozen=True)
 class VerbsTiming:
     """Calibration constants of the simulated verbs path.

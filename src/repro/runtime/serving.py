@@ -55,6 +55,7 @@ from repro.hotcache.miss_path import HostHashCache, TieredLookupService
 from repro.models import recsys as R
 from repro.obs.metrics import Histogram, get_registry
 from repro.obs.trace import (
+    CAT_ADMISSION,
     CAT_DENSE,
     CAT_LOOKUP,
     CAT_SERVE,
@@ -62,6 +63,7 @@ from repro.obs.trace import (
     TID_RANKER,
 )
 from repro.rdma.service import PooledLookupService
+from repro.runtime.admission import AdmissionController, ShedError
 from repro.utils import logger
 
 
@@ -251,9 +253,29 @@ class FlexEMRServer:
         # (on_admit), watchdogs the retire wait (guarded_wait), and is
         # drained first on close; its summary() registers under chaos.*.
         # Pooled engine only — the fault surface is the rdma pool.
+        admission: AdmissionController | None = None,  # deadline-aware
+        # overload shedding + adaptive pipeline depth at the submit
+        # boundary (runtime.admission); None = admit everything, the
+        # pre-overload-control behaviour.  Its summary() registers under
+        # serve.admission.*.
+        retry_policy=None,  # rdma.verbs.RetryPolicy | None: per-WR virtual
+        # timeout + seeded backoff for transient WR failures + the shared
+        # retry budget (hedges charge it too).  Pooled engine only.
+        # Bit-equal with None when no fault fires.
+        degrade_policy: str = "strict",  # brownout policy for dropped-shard
+        # cold rows (rdma.engine.DEGRADE_POLICIES): 'strict' parks until
+        # restore (the PR-8 default), 'degrade' answers the cache tier's
+        # best partial with a per-request degraded flag, 'block' fails
+        # fast.  Pooled engine only.
     ):
         if pipeline_depth <= 0:
             raise ValueError("pipeline_depth must be positive")
+        if engine != "pooled" and (
+            retry_policy is not None or degrade_policy != "strict"
+        ):
+            raise ValueError(
+                "retry_policy / degrade_policy require the pooled engine"
+            )
         self.cfg = cfg
         self.params = params
         self.tables = tables
@@ -270,6 +292,8 @@ class FlexEMRServer:
                 pushdown_segments=pushdown,
                 timing=timing, emulate_wire=emulate_wire, dedup=dedup,
                 tracer=self.tracer,
+                retry_policy=retry_policy,
+                degrade_policy=degrade_policy,
             )
         elif engine == "legacy":
             self.service = HostLookupService(
@@ -285,6 +309,19 @@ class FlexEMRServer:
         self.pipeline_depth = pipeline_depth
         self.batcher = batcher or BucketBatcher()
         self.metrics = ServeMetrics()
+        self.degrade_policy = degrade_policy
+        self.retry_policy = retry_policy
+        self.admission = admission
+        # Bounded-queue gauge: requests submitted but not yet admitted into
+        # a batch.  Submit may run on a driver thread while _admit_next
+        # drains on the serving thread, so the counter takes a leaf lock.
+        self._queue_lock = threading.Lock()
+        self._queued = 0
+        # Brownout accounting (serve.degraded.*): requests retired with at
+        # least one bag missing dropped-shard cold rows.
+        self._degraded_requests = 0
+        self._degraded_batches = 0
+        self._degraded_rows = 0
         self.prefetcher = prefetcher
         # repro.hotcache tiered front end over the lookup service.  The hash
         # cache starts empty (0 slots) until the controller's first plan;
@@ -353,6 +390,21 @@ class FlexEMRServer:
             if not slo.tracer.enabled and self.tracer.enabled:
                 slo.tracer = self.tracer
             self.registry.register_provider("slo", slo.summary)
+        if admission is not None:
+            # The configured depth is the adaptive ceiling; the effective
+            # depth (admission.depth) shrinks under sustained burn-rate
+            # alerts and re-grows on recovery — see step().
+            admission.attach(pipeline_depth)
+            self.registry.register_provider(
+                "serve.admission", self._admission_summary
+            )
+        self.registry.register_provider(
+            "serve.degraded", self._degraded_summary
+        )
+        if engine == "pooled":
+            self.registry.register_provider(
+                "rdma.retry", self.service.retry_summary
+            )
 
     # ------------------------------------------------------------ dense part
 
@@ -455,9 +507,44 @@ class FlexEMRServer:
         """Enqueue one request.  Open-loop drivers stamp ``arrival`` with
         the intended arrival time (perf_counter timebase) so submission lag
         counts as queue wait, and ``deadline_s`` with the latency budget the
-        SLO monitor's goodput accounting checks at retire."""
+        SLO monitor's goodput accounting checks at retire.
+
+        With an :class:`AdmissionController` attached this is the shed
+        boundary: an already-expired deadline, a full submit queue, or an
+        unmeetable deadline estimate raises :class:`ShedError` *before* the
+        request takes a pipeline slot.  Admitted requests flow the exact
+        same path as with admission off (bit-equal outputs)."""
+        if self.admission is not None:
+            now = time.perf_counter()
+            arr = now if arrival is None else min(arrival, now)
+            with self._queue_lock:
+                queued = self._queued
+            try:
+                self.admission.check(
+                    now, arr, deadline_s, queued, len(self._pipeline)
+                )
+            except ShedError as exc:
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "shed", CAT_ADMISSION, self.tracer.now(),
+                        tid=TID_RANKER,
+                        args={"reason": exc.reason, "queued": queued,
+                              "deadline_ms": None if deadline_s is None
+                              else round(deadline_s * 1e3, 3)},
+                    )
+                raise
+            with self._queue_lock:
+                self._queued += 1
         return self.batcher.submit(payload, arrival=arrival,
                                    deadline_s=deadline_s)
+
+    @property
+    def effective_depth(self) -> int:
+        """The pipeline depth currently in force: the configured depth,
+        shrunk by the admission controller under sustained SLO alerts."""
+        if self.admission is None:
+            return self.pipeline_depth
+        return min(self.pipeline_depth, self.admission.depth)
 
     def step(self) -> dict | None:
         """Admit batches until `pipeline_depth` are in flight, then retire
@@ -466,7 +553,7 @@ class FlexEMRServer:
         stage runs, so the engine pool fetches N+1's misses while the ranker
         is in the dense NN (and, at admit time, while N is still on the
         wire).  Returns the oldest batch's result, or None when idle."""
-        while len(self._pipeline) < self.pipeline_depth:
+        while len(self._pipeline) < self.effective_depth:
             if self._pipeline and self._pipeline[0].pending.done:
                 # The oldest batch is already merged-ready: retire it now
                 # rather than blocking in the batcher poll for an admit —
@@ -487,6 +574,9 @@ class FlexEMRServer:
         if polled is None:
             return False
         bucket, reqs = polled
+        if self.admission is not None:
+            with self._queue_lock:
+                self._queued = max(0, self._queued - len(reqs))
         if self.chaos is not None:
             # Fault triggers count admitted batches: a fault at batch k
             # fires here, before batch k's own lookup posts, so its WRs
@@ -611,6 +701,40 @@ class FlexEMRServer:
                 met = None if r.deadline_s is None \
                     else bool(lat <= r.deadline_s)
                 self.slo.observe(lat, deadline_met=met)
+        # ---- brownout flags (degrade policy): flat degraded bag ids
+        # [0, B*F) map back to the requests whose sums they are — padded
+        # tail rows carry no request and are skipped.
+        degraded = [False] * len(reqs)
+        dbags = pending.degraded_bags
+        if dbags:
+            F = self.cfg.num_fields
+            for b in dbags:
+                i = b // F
+                if i < len(reqs):
+                    degraded[i] = True
+            n_deg = sum(degraded)
+            if n_deg:
+                self._degraded_batches += 1
+                self._degraded_requests += n_deg
+                self._degraded_rows += pending.degraded_rows
+                if tracer.enabled:
+                    tracer.instant(
+                        "degraded", CAT_SERVE, tracer.now(), tid=TID_RANKER,
+                        args={"bucket": bucket, "requests": n_deg,
+                              "rows": pending.degraded_rows},
+                    )
+        if self.admission is not None:
+            delta = self.admission.on_retire(
+                t_retire, len(reqs),
+                alerting=self.slo is not None and self.slo.alerting,
+            )
+            if delta and tracer.enabled:
+                tracer.instant(
+                    "depth_shrink" if delta < 0 else "depth_regrow",
+                    CAT_ADMISSION, tracer.now(), tid=TID_RANKER,
+                    args={"depth": self.admission.depth,
+                          "max_depth": self.admission.max_depth},
+                )
         if self.controller is not None:
             if pending.unique_ids is not None:
                 # Heat off the hot path: the admit-phase dedup prepass
@@ -628,7 +752,8 @@ class FlexEMRServer:
                 self.controller.observe(bucket, fused[batch["mask"]])
             if self.metrics.batches % self.cache_refresh_every == 0:
                 self._apply_cache_plan(bucket)
-        return {"bucket": bucket, "scores": scores, "latency_s": dt}
+        return {"bucket": bucket, "scores": scores, "latency_s": dt,
+                "degraded": degraded}
 
     def _apply_cache_plan(self, current_batch: int) -> None:
         plan = self.controller.plan(current_batch)
@@ -719,6 +844,22 @@ class FlexEMRServer:
             "num_shards": new_num_shards,
             "moved_rows": res.moved_rows,
             "inflight_invalidated": invalidated,
+        }
+
+    def _admission_summary(self) -> dict:
+        """serve.admission.*: controller counters + the live queue gauge."""
+        s = self.admission.summary()
+        with self._queue_lock:
+            s["queue_depth"] = self._queued
+        return s
+
+    def _degraded_summary(self) -> dict:
+        """serve.degraded.*: brownout-flagged work retired so far."""
+        return {
+            "requests": self._degraded_requests,
+            "batches": self._degraded_batches,
+            "rows": self._degraded_rows,
+            "policy": self.degrade_policy,
         }
 
     def engine_summary(self) -> dict | None:

@@ -90,6 +90,19 @@ RULES: dict[str, dict[str, tuple[str, float]]] = {
         # deterministic per seed: every scheduled fault must keep firing
         "faults_fired": ("higher_rel", 0.0),
     },
+    "overload_smoke": {
+        "gates_ok": ("equal", 0.0),
+        "grid_strict_bit_equal": ("equal", 0.0),
+        "grid_flags_cover_mismatches": ("equal", 0.0),
+        "grid_zero_hangs": ("equal", 0.0),
+        "storm_zero_hangs": ("equal", 0.0),
+        "storm_firing_deterministic": ("equal", 0.0),
+        # retries are budget-capped by construction; gate the accounting
+        "retry_amplification": ("lower_abs", 0.05),
+        # wall-clock goodput A/B: gate only catastrophic collapse of the
+        # shed-on advantage (the bench itself gates >= 1.3x)
+        "goodput_ratio": ("higher_rel", 0.5),
+    },
 }
 
 

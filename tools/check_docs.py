@@ -21,7 +21,8 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 # obs/slo.py); each must be documented in the OBSERVABILITY.md namespace
 # table.
 NAMESPACES = ("serve.", "tier.", "rdma.pool.", "prefetch.", "serve.attr.",
-              "slo.", "chaos.")
+              "slo.", "chaos.", "serve.admission.", "rdma.retry.",
+              "serve.degraded.")
 
 
 def check_architecture() -> list[str]:
